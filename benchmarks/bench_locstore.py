@@ -1,0 +1,52 @@
+"""E4 — location service + store microbenchmarks (placement control, lookup
+scaling, shard balance)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.locstore import LocStore, LocationService, Placement, SimObject
+
+
+def run(report) -> None:
+    n = 20_000
+    # put with explicit placement (S_LOC path)
+    st = LocStore(1024, n_meta_shards=32)
+    t0 = time.perf_counter()
+    for i in range(n):
+        st.put(f"f{i}", SimObject(1024.0), loc=i % 1024)
+    dt = time.perf_counter() - t0
+    report("locstore/put_pinned", dt * 1e6 / n, f"{n/dt:,.0f} puts/s")
+
+    # location lookups
+    t0 = time.perf_counter()
+    for i in range(n):
+        st.loc.lookup(f"f{i}")
+    dt = time.perf_counter() - t0
+    report("locstore/lookup", dt * 1e6 / n, f"{n/dt:,.0f} lookups/s")
+
+    # locality-accounted reads (50% local)
+    t0 = time.perf_counter()
+    for i in range(n):
+        st.get(f"f{i}", at=(i % 1024) if i % 2 == 0 else (i + 7) % 1024)
+    dt = time.perf_counter() - t0
+    rep = st.movement_report()
+    report("locstore/get_accounted", dt * 1e6 / n,
+           f"hit={rep['locality_hit_rate']:.1%}")
+
+    # migration (runtime feedback channel)
+    t0 = time.perf_counter()
+    for i in range(0, n, 10):
+        st.migrate(f"f{i}", (i + 1) % 1024)
+    dt = time.perf_counter() - t0
+    report("locstore/migrate", dt * 1e6 / (n / 10), "")
+
+    # metadata shard balance at scale
+    svc = LocationService(64)
+    for i in range(100_000):
+        svc.record(f"obj{i}", Placement((i % 512,)))
+    bal = svc.load_balance()
+    skew = bal["max_shard"] / (bal["entries"] / bal["shards"])
+    report("locstore/shard_balance", 0.0,
+           f"entries={bal['entries']} shards={bal['shards']} "
+           f"max/mean={skew:.2f}")

@@ -1,0 +1,61 @@
+"""E2 — proactive pipelining hides I/O time.
+
+Two measurements:
+  (a) simulator: per-task I/O wait with locality-only vs proactive scheduling
+      (the paper's "data will already be there" claim), across compute:I/O
+      ratios — pipelining can only hide movement behind computation, so the
+      win should grow with compute intensity;
+  (b) real pipeline: wall time of a smoke-scale training run with the
+      prefetching loader vs a synchronous loader, with producer latency
+      injected (models slow storage).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (HPC_CLUSTER, LocalityScheduler, ProactiveScheduler,
+                        compile_workflow, simulate)
+from repro.core.workloads import random_layered_workflow
+from repro.data.pipeline import PrefetchingLoader
+
+
+def run(report) -> None:
+    # (a) simulated I/O wait vs compute intensity
+    for fpb in (200.0, 2000.0, 20000.0):
+        g = random_layered_workflow(8, 16, seed=3, flops_per_byte=fpb)
+        wf = compile_workflow(g, HPC_CLUSTER)
+        loc = simulate(wf, LocalityScheduler, n_nodes=16, hw=HPC_CLUSTER)
+        pro = simulate(wf, ProactiveScheduler, n_nodes=16, hw=HPC_CLUSTER)
+        saved = loc.io_wait_total - pro.io_wait_total
+        report(f"prefetch/sim/fpb{int(fpb)}", 0.0,
+               f"io_wait {loc.io_wait_total:.1f}s -> {pro.io_wait_total:.1f}s "
+               f"(saved {saved:.1f}s, {saved/max(loc.io_wait_total,1e-9):.0%}) "
+               f"prefetched={pro.bytes_prefetched/2**30:.1f}GiB")
+
+    # (b) real loader A/B with injected producer latency
+    def producer(delay, n=12):
+        for i in range(n):
+            time.sleep(delay)
+            yield {"x": np.zeros((64, 64), np.float32)}
+
+    def consume(batches, work=0.03):
+        for _ in batches:
+            time.sleep(work)          # stands in for train_step
+
+    delay = 0.03
+    t0 = time.perf_counter()
+    consume(producer(delay))
+    serial = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    loader = PrefetchingLoader(producer(delay), depth=2)
+    consume(loader)
+    overlapped = time.perf_counter() - t0
+
+    report("prefetch/real/serial", serial * 1e6 / 12, f"wall={serial:.2f}s")
+    report("prefetch/real/overlapped", overlapped * 1e6 / 12,
+           f"wall={overlapped:.2f}s speedup={serial/overlapped:.2f}x "
+           f"waits={loader.waits}")

@@ -1,0 +1,113 @@
+"""E6 — roofline analysis from the dry-run's compiled artifacts.
+
+For every (arch × shape × mesh) cell in results/dryrun.jsonl:
+
+  compute term    = corrected dot FLOPs per device   / 197 TFLOP/s (bf16)
+  memory term     = (result bytes + argument bytes)  / 819 GB/s HBM
+  collective term = corrected collective bytes       / 50 GB/s ICI link
+
+(dot FLOPs / collective bytes are while-trip-count corrected — see
+launch/hlo_analysis.py; cost_analysis() counts loop bodies once and is
+reported alongside for reference.)
+
+Also derives MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens
+(prefill, decode) and the usefulness ratio MODEL_FLOPS / compiled FLOPs —
+remat recompute, attention, and sharding redundancy all push it below 1.
+
+perf_fraction = ideal-compute-time / dominant-term-time — the dry-run MFU
+equivalent this repo's §Perf score is measured by.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.models import active_param_count
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link (conservative single-link figure)
+
+def _default_dryrun() -> str:
+    for cand in ("results/dryrun_final.jsonl", "results/dryrun_opt.jsonl",
+                 "results/dryrun.jsonl"):
+        if os.path.exists(cand):
+            return cand
+    return "results/dryrun.jsonl"
+
+
+DRYRUN = os.environ.get("XFLOW_DRYRUN") or _default_dryrun()
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token/sequence
+
+
+def terms(rec: dict) -> dict:
+    nd = rec["n_devices"]
+    comp = rec.get("dot_flops_per_device", 0.0) / PEAK_FLOPS
+    mem = (rec.get("result_bytes_per_device", 0.0)
+           + rec.get("argument_size_in_bytes", 0)) / HBM_BW
+    coll = rec.get("collective_total", 0.0) / ICI_BW
+    dom = max(("compute", comp), ("memory", mem), ("collective", coll),
+              key=lambda kv: kv[1])
+    mf = model_flops(rec["arch"], rec["shape"])
+    ideal = mf / nd / PEAK_FLOPS
+    frac = ideal / dom[1] if dom[1] > 0 else 0.0
+    hlo_total = rec.get("dot_flops_per_device", 0.0) * nd
+    return {
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dom[0], "dominant_s": dom[1],
+        "model_flops": mf, "useful_ratio": mf / hlo_total if hlo_total else 0,
+        "perf_fraction": frac,
+    }
+
+
+def suggestion(t: dict) -> str:
+    if t["dominant"] == "collective":
+        return "shard activations on seq (SP) / overlap collectives"
+    if t["dominant"] == "memory":
+        return "shrink cache sweep (window slice) / fuse & reuse"
+    if t["useful_ratio"] < 0.5:
+        return "cut remat recompute / replicated compute"
+    return "increase arithmetic intensity (larger per-chip tiles)"
+
+
+def load(path: str = DRYRUN) -> list[dict]:
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return list(recs.values())
+
+
+def run(report) -> None:
+    if not os.path.exists(DRYRUN):
+        report("roofline/missing", 0.0, f"run launch/dryrun.py first ({DRYRUN})")
+        return
+    recs = [r for r in load() if r.get("ok")]
+    worst = None
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = terms(r)
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        report(name, t["dominant_s"] * 1e6,
+               f"comp={t['compute_s']*1e3:.1f}ms mem={t['memory_s']*1e3:.1f}ms "
+               f"coll={t['collective_s']*1e3:.1f}ms dom={t['dominant']} "
+               f"useful={t['useful_ratio']:.2f} frac={t['perf_fraction']:.3f} "
+               f"-> {suggestion(t)}")
+        if worst is None or t["perf_fraction"] < worst[1]:
+            worst = (name, t["perf_fraction"])
+    if worst:
+        report("roofline/worst_cell", 0.0, f"{worst[0]} frac={worst[1]:.4f}")

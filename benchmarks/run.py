@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper claim / deliverable table.
+
+Prints ``name,us_per_call,derived`` CSV rows (and tees a JSON copy to
+results/benchmarks.json).
+
+  E1 bench_scheduler — FCFS vs locality vs proactive (+ 4096-node scaling)
+  E2 bench_prefetch  — proactive pipelining hides I/O time (sim + real)
+  E3 bench_ablation  — cross-layer ablation (each layer earns its keep)
+  E4 bench_locstore  — location service / store microbenchmarks
+  E5 bench_serving   — location-aware routing saves prefills
+  E6 bench_roofline  — roofline terms per (arch × shape × mesh) dry-run cell
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module name")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_ablation, bench_locstore, bench_prefetch,
+                            bench_roofline, bench_scheduler, bench_serving)
+    modules = [bench_scheduler, bench_prefetch, bench_ablation,
+               bench_locstore, bench_serving, bench_roofline]
+
+    rows: list[dict] = []
+
+    def report(name: str, us_per_call: float, derived: str = "") -> None:
+        rows.append({"name": name, "us_per_call": us_per_call,
+                     "derived": derived})
+        print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    for mod in modules:
+        if args.only and args.only not in mod.__name__:
+            continue
+        try:
+            mod.run(report)
+        except Exception as e:  # noqa: BLE001 - a bench failure is a result
+            report(f"{mod.__name__}/ERROR", 0.0, f"{type(e).__name__}: {e}")
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

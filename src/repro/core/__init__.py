@@ -1,0 +1,33 @@
+"""Core — the paper's cross-layer contribution as a composable library.
+
+Layers (paper §B):
+  * storage:   :mod:`repro.core.locstore` — location-aware store + location service
+  * compiler:  :mod:`repro.core.hints` + :mod:`repro.core.wfcompiler`
+  * runtime:   :mod:`repro.core.scheduler` + :mod:`repro.core.prefetch`
+               + :mod:`repro.core.executor` (real) / :mod:`repro.core.simulator`
+"""
+
+from repro.core.dag import DataSpec, TaskGraph, TaskSpec
+from repro.core.executor import WorkflowExecutor
+from repro.core.hints import Complexity, TaskHints, size_hint, task
+from repro.core.locstore import (LocationService, LocStore, Placement,
+                                 REMOTE_TIER, SimObject, Transfer)
+from repro.core.prefetch import PrefetchEngine
+from repro.core.scheduler import (Assignment, FCFSScheduler, LocalityScheduler,
+                                  PrefetchRequest, ProactiveScheduler)
+from repro.core.simulator import SimResult, WorkflowSimulator, simulate
+from repro.core.wfcompiler import (CompiledWorkflow, HardwareModel, HPC_CLUSTER,
+                                   TPU_V5E, compile_workflow)
+
+__all__ = [
+    "DataSpec", "TaskGraph", "TaskSpec",
+    "Complexity", "TaskHints", "size_hint", "task",
+    "LocationService", "LocStore", "Placement", "REMOTE_TIER", "SimObject",
+    "Transfer",
+    "CompiledWorkflow", "HardwareModel", "HPC_CLUSTER", "TPU_V5E",
+    "compile_workflow",
+    "Assignment", "FCFSScheduler", "LocalityScheduler", "PrefetchRequest",
+    "ProactiveScheduler",
+    "PrefetchEngine", "WorkflowExecutor",
+    "SimResult", "WorkflowSimulator", "simulate",
+]

@@ -1,0 +1,304 @@
+"""Location-aware store — the paper's file-system layer (§B, first component).
+
+Reproduces, on top of JAX/host memory instead of Memcached, the three file
+system extensions the paper proposes for Hercules:
+
+1. **Placement control at create** — ``LocStore.put(name, value, loc=...)`` is
+   ``OPEN(..., O_CREAT | S_LOC)``: the caller pins where the object lives. With
+   no ``loc``, the store falls back to its default policy (consistent hash over
+   nodes — what Hercules/Memcached would do).
+2. **Location in extended attributes** — every object carries a
+   :class:`Placement` with an ``xattr`` dict; ``stat``/``getxattr`` expose it.
+3. **Distributed location service** — :class:`LocationService` shards the
+   name -> real-loc mapping by consistent hash into ``n_shards`` independent
+   metadata shards (one per metadata server in a real deployment), so lookups
+   scale with the cluster instead of bottlenecking on one server. The runtime
+   may re-pin ("real-loc") any object at any time via ``migrate`` — this is the
+   channel the scheduler uses for its feedback (paper challenge #3).
+
+Values can be anything sized: JAX arrays (``.nbytes``), numpy arrays, bytes, or
+:class:`SimObject` stand-ins for the simulator. ``get(name, at=node)`` returns
+the value AND a :class:`Transfer` record of the bytes that had to move — the
+accounting every benchmark in this repo is built on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+from typing import Any, Iterable, Mapping
+
+__all__ = ["Placement", "SimObject", "Transfer", "LocationService", "LocStore",
+           "REMOTE_TIER"]
+
+REMOTE_TIER = -1  # node id of the remote parallel-FS tier (Lustre analogue)
+
+
+def _stable_hash(name: str) -> int:
+    return int.from_bytes(hashlib.blake2b(name.encode(), digest_size=8).digest(),
+                          "big")
+
+
+@dataclasses.dataclass
+class Placement:
+    """Where an object lives: one or more node ids (+ the remote tier).
+
+    ``nodes`` is a tuple because the store supports replication; the paper's
+    ``real-loc`` is ``nodes[0]``. ``xattr`` is the extended-attribute dict the
+    paper stores location metadata in.
+    """
+
+    nodes: tuple[int, ...]
+    tier: str = "node"                      # "node" | "remote"
+    xattr: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def real_loc(self) -> int:
+        return self.nodes[0]
+
+    def resident_on(self, node: int) -> bool:
+        return node in self.nodes
+
+
+@dataclasses.dataclass(frozen=True)
+class SimObject:
+    """A sized placeholder used by the simulator (no actual payload)."""
+
+    nbytes: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """One data movement the store had to perform to satisfy a ``get``."""
+
+    name: str
+    nbytes: float
+    src: int
+    dst: int
+
+    @property
+    def local(self) -> bool:
+        return self.src == self.dst
+
+
+def sizeof(value: Any) -> float:
+    nb = getattr(value, "nbytes", None)
+    if nb is not None:
+        return float(nb)
+    if isinstance(value, (bytes, bytearray, memoryview)):
+        return float(len(value))
+    return float(64)  # opaque python object — metadata-sized
+
+
+class LocationService:
+    """Distributed location-metadata service (consistent-hash sharded).
+
+    Each shard is an independent dict + lock — the in-process model of one
+    metadata server. ``shard_of`` is deterministic so any client can route a
+    lookup without coordination. Counters let the benchmarks report per-shard
+    load balance (the scalability argument for "distributed" in the paper).
+    """
+
+    def __init__(self, n_shards: int = 16) -> None:
+        if n_shards < 1:
+            raise ValueError("need at least one metadata shard")
+        self.n_shards = n_shards
+        self._shards: list[dict[str, Placement]] = [{} for _ in range(n_shards)]
+        self._locks = [threading.Lock() for _ in range(n_shards)]
+        self.lookups = [0] * n_shards
+        self.records = [0] * n_shards
+
+    def shard_of(self, name: str) -> int:
+        return _stable_hash(name) % self.n_shards
+
+    def record(self, name: str, placement: Placement) -> None:
+        s = self.shard_of(name)
+        with self._locks[s]:
+            self._shards[s][name] = placement
+            self.records[s] += 1
+
+    def lookup(self, name: str) -> Placement | None:
+        s = self.shard_of(name)
+        with self._locks[s]:
+            self.lookups[s] += 1
+            return self._shards[s].get(name)
+
+    def drop(self, name: str) -> None:
+        s = self.shard_of(name)
+        with self._locks[s]:
+            self._shards[s].pop(name, None)
+
+    def names(self) -> list[str]:
+        out: list[str] = []
+        for s, lock in zip(self._shards, self._locks):
+            with lock:
+                out.extend(s.keys())
+        return out
+
+    def load_balance(self) -> Mapping[str, Any]:
+        sizes = [len(s) for s in self._shards]
+        return {"shards": self.n_shards, "entries": sum(sizes),
+                "max_shard": max(sizes, default=0),
+                "min_shard": min(sizes, default=0),
+                "lookups": sum(self.lookups)}
+
+
+class LocStore:
+    """The location-aware compute-node-side store.
+
+    ``nodes`` are integer ids 0..N-1 (plus :data:`REMOTE_TIER`). Thread-safe:
+    the executor's worker threads and the prefetch engine hit it concurrently.
+    """
+
+    def __init__(self, n_nodes: int, *, n_meta_shards: int = 16,
+                 default_policy: str = "hash") -> None:
+        if n_nodes < 1:
+            raise ValueError("need at least one node")
+        self.n_nodes = n_nodes
+        self.loc = LocationService(n_meta_shards)
+        self.default_policy = default_policy
+        self._values: dict[str, Any] = {}
+        self._lock = threading.RLock()
+        self._rr = 0
+        # accounting
+        self.transfers: list[Transfer] = []
+        self.bytes_moved = 0.0
+        self.bytes_local = 0.0
+        self.migrations = 0
+
+    # ------------------------------------------------------------ placement
+    def _default_placement(self, name: str) -> Placement:
+        if self.default_policy == "hash":       # Hercules/Memcached behaviour
+            node = _stable_hash(name) % self.n_nodes
+        elif self.default_policy == "rr":
+            with self._lock:
+                node = self._rr % self.n_nodes
+                self._rr += 1
+        else:
+            raise ValueError(f"unknown default policy {self.default_policy!r}")
+        return Placement(nodes=(node,))
+
+    def _norm_loc(self, loc: Any) -> Placement:
+        if isinstance(loc, Placement):
+            return loc
+        if isinstance(loc, int):
+            return Placement(nodes=(loc,))
+        if isinstance(loc, (tuple, list)):
+            return Placement(nodes=tuple(int(n) for n in loc))
+        raise TypeError(f"cannot interpret location {loc!r}")
+
+    # ------------------------------------------------------------------ api
+    def put(self, name: str, value: Any, *, loc: Any | None = None,
+            xattr: Mapping[str, Any] | None = None) -> Placement:
+        """Create an object; ``loc`` is the paper's ``S_LOC`` pinned placement."""
+        placement = (self._norm_loc(loc) if loc is not None
+                     else self._default_placement(name))
+        for n in placement.nodes:
+            if n != REMOTE_TIER and not (0 <= n < self.n_nodes):
+                raise ValueError(f"node {n} out of range for {self.n_nodes} nodes")
+        placement.xattr.update(xattr or {})
+        placement.xattr.setdefault("ctime", time.time())
+        placement.xattr.setdefault("size", sizeof(value))
+        with self._lock:
+            self._values[name] = value
+        self.loc.record(name, placement)
+        return placement
+
+    def exists(self, name: str) -> bool:
+        return self.loc.lookup(name) is not None
+
+    def stat(self, name: str) -> Placement:
+        p = self.loc.lookup(name)
+        if p is None:
+            raise KeyError(name)
+        return p
+
+    def getxattr(self, name: str, key: str) -> Any:
+        """POSIX ``getxattr`` equivalent, incl. the location metadata."""
+        p = self.stat(name)
+        if key == "real_loc":
+            return p.real_loc
+        if key == "nodes":
+            return p.nodes
+        return p.xattr[key]
+
+    def get(self, name: str, *, at: int | None = None) -> tuple[Any, Transfer | None]:
+        """Read an object from node ``at``; returns (value, movement record).
+
+        If the object is resident on ``at`` the movement record is a
+        zero-copy local hit (``Transfer.local``); otherwise the nearest replica
+        is the source and the store notes a network transfer. ``at=None`` skips
+        accounting (metadata read).
+        """
+        p = self.stat(name)
+        with self._lock:
+            value = self._values[name]
+        if at is None:
+            return value, None
+        nbytes = sizeof(value)
+        if p.resident_on(at):
+            t = Transfer(name, nbytes, at, at)
+            with self._lock:
+                self.bytes_local += nbytes
+                self.transfers.append(t)
+            return value, t
+        src = min(p.nodes, key=lambda n: (n == REMOTE_TIER, abs(n - at)))
+        t = Transfer(name, nbytes, src, at)
+        with self._lock:
+            self.bytes_moved += nbytes
+            self.transfers.append(t)
+        return value, t
+
+    def migrate(self, name: str, loc: Any) -> Transfer:
+        """Re-pin an object (the runtime->FS feedback channel).
+
+        Returns the transfer that re-pinning implies. The value itself stays in
+        the in-process dict (host RAM) — on a real deployment this issues the
+        copy; device-resident arrays are re-placed by the executor.
+        """
+        p = self.stat(name)
+        new = self._norm_loc(loc)
+        new.xattr.update(p.xattr)
+        new.xattr["migrated_from"] = p.nodes
+        with self._lock:
+            value = self._values[name]
+            nbytes = sizeof(value)
+            src = p.real_loc
+            self.migrations += 1
+            if not set(new.nodes) & set(p.nodes):
+                self.bytes_moved += nbytes
+        self.loc.record(name, new)
+        return Transfer(name, nbytes, src, new.real_loc)
+
+    def replicate(self, name: str, extra_nodes: Iterable[int]) -> Placement:
+        """Add replicas (used by the prefetch engine: the original stays)."""
+        p = self.stat(name)
+        nodes = tuple(dict.fromkeys((*p.nodes, *extra_nodes)))
+        new = Placement(nodes=nodes, tier=p.tier, xattr=dict(p.xattr))
+        self.loc.record(name, new)
+        return new
+
+    def delete(self, name: str) -> None:
+        with self._lock:
+            self._values.pop(name, None)
+        self.loc.drop(name)
+
+    # ------------------------------------------------------------ reporting
+    def movement_report(self) -> Mapping[str, float]:
+        total = self.bytes_moved + self.bytes_local
+        return {
+            "bytes_moved": self.bytes_moved,
+            "bytes_local": self.bytes_local,
+            "locality_hit_rate": (self.bytes_local / total) if total else 1.0,
+            "migrations": float(self.migrations),
+            "transfers": float(len(self.transfers)),
+        }
+
+    def reset_accounting(self) -> None:
+        with self._lock:
+            self.transfers.clear()
+            self.bytes_moved = 0.0
+            self.bytes_local = 0.0
+            self.migrations = 0

@@ -1,0 +1,123 @@
+"""Single-token decode attention vs a long KV cache — Pallas TPU kernel.
+
+The decode_32k / long_500k hot spot: one query row per (batch, head) against
+S cache entries. Memory-bound by design (roofline: ~2·S·hd bytes of cache per
+head at ~0 reuse), so the kernel's job is to stream k/v blocks through VMEM at
+full HBM bandwidth while keeping the softmax state in registers/VMEM.
+
+Grid = (B, Hq, S/BK) — the cache sweep is the sequential dim; online-softmax
+state (m, l, acc) persists in VMEM scratch. Per-batch ``lengths`` masks unseen
+cache slots; sliding-window archs pass ``window`` so dead blocks are skipped
+with pl.when (compute-free predication — on real TPUs the bandwidth win comes
+from shrinking the swept region; see ops.window_slice below).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BK = 512
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, window: int, bk: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[pl.program_id(0)]                  # this batch's valid entries
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)[0]
+
+    live = (ik * bk) < length
+    if window > 0:
+        live &= (ik * bk + bk - 1) >= (length - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, :].astype(jnp.float32)          # (hd,)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, hd)
+        s = (k @ q) * scale                             # (bk,)
+        ok = k_pos < length
+        if window > 0:
+            ok &= (length - 1 - k_pos) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[0, 0]
+        m_cur = jnp.maximum(m_prev, s.max())
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(ok, jnp.exp(s - m_cur), 0.0)      # (bk,)
+        l_scr[0, 0] = l_scr[0, 0] * alpha + p.sum()
+        v = v_ref[0, :, 0, :].astype(jnp.float32)       # (bk, hd)
+        acc_scr[0, :] = acc_scr[0, :] * alpha + p @ v
+        m_scr[0, 0] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0, :] = (acc_scr[0, :]
+                          / jnp.maximum(l_scr[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softmax_scale", "block_k", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *, window: int = 0,
+                     softmax_scale: float | None = None,
+                     block_k: int = DEFAULT_BK,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, hd); caches: (B, S, Hkv, hd); lengths: (B,) int32.
+
+    Returns (B, Hq, hd). The query sits at absolute position lengths-1.
+    """
+    B, Hq, hd = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+
+    bk = min(block_k, max(S, 8))
+    s_pad = (-S) % bk
+    hd_pad = (-hd) % 128
+    if hd_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, hd_pad)))
+    if s_pad or hd_pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, s_pad), (0, 0), (0, hd_pad)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, s_pad), (0, 0), (0, hd_pad)))
+    Sp, hdp = S + s_pad, hd + hd_pad
+
+    grid = (B, Hq, Sp // bk)
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               bk=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # lengths, whole array
+            pl.BlockSpec((1, 1, hdp), lambda b, h, ik: (b, h, 0)),
+            pl.BlockSpec((1, bk, 1, hdp),
+                         lambda b, h, ik, g=group: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, hdp),
+                         lambda b, h, ik, g=group: (b, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hdp), lambda b, h, ik: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hdp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hdp), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k_cache, v_cache)
+    return out[:, :, :hd]

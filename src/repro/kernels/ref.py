@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Self-contained (no imports from repro.models) so a kernel test failure is
+attributable to the kernel alone. Math is the plain materialized-scores
+formulation in f32 — the slowest, most obviously-correct spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        q_offset: int = 0,
+                        softmax_scale: float | None = None) -> jax.Array:
+    """q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd); GQA via Hq % Hkv == 0.
+
+    ``q_offset`` places query i at absolute position q_offset + i (for
+    suffix/chunked prefill); keys are at absolute positions 0..Sk-1.
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= qpos - kpos < window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         lengths: jax.Array, *, window: int = 0,
+                         softmax_scale: float | None = None) -> jax.Array:
+    """Single-token attention vs a cache.
+
+    q: (B, Hq, hd); caches: (B, S, Hkv, hd); lengths: (B,) — number of valid
+    cache entries (query sits at position lengths-1).
+    """
+    B, Hq, hd = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(S)[None, :]
+    ok = kpos < lengths[:, None]
+    if window > 0:
+        ok &= (lengths[:, None] - 1 - kpos) < window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, v_cache.shape[-1]).astype(q.dtype)

@@ -1,0 +1,237 @@
+"""While-aware analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE — useless for
+scan-over-layers programs where ~L× the reported FLOPs actually execute. This
+module parses ``compiled.as_text()`` into computations, recovers each loop's
+trip count from its condition's comparison constant, propagates execution
+multiplicities (ENTRY=1, while body ×trip, fusion bodies inherit the caller's
+multiplicity), and reports:
+
+  * ``dot_flops``          — Σ mult × 2 × numel(result) × K over every dot,
+  * ``collective_bytes``   — Σ mult × result bytes, by collective type,
+  * ``result_bytes``       — Σ mult × result bytes over top-level instructions
+                             (a proxy for HBM traffic written; reads ≈ same
+                             order), excluding fusion-internal instructions.
+
+This is the dry-run "profile" the §Perf loop reads: redundant collectives,
+layout copies and remat recompute all show up here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Iterable
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HDR = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((?:[^()]|\([^()]*\))*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:[\w\[\],{}\s/*]+?))\s+"
+    r"([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_WHILE_LINKS = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_info(type_text: str) -> tuple[float, list[tuple[str, list[int]]]]:
+    """(total bytes, [(dtype, dims), ...]) for a result type string."""
+    total = 0.0
+    shapes = []
+    for dt, dims_s in _SHAPE.findall(type_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",") if d]
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, dims))
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_bytes: float
+    result_shapes: list
+    rest: str            # text after the '(' of op(...)
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    instrs: list[Instr] = dataclasses.field(default_factory=list)
+    shapes: dict[str, list] = dataclasses.field(default_factory=dict)
+    is_fusion_body: bool = False
+
+
+def parse_computations(text: str) -> dict[str, Comp]:
+    comps: dict[str, Comp] = {}
+    cur: Comp | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):       # top-level: computation header
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Comp(m.group(1))
+                comps[cur.name] = cur
+            elif line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rtype, op, rest = m.groups()
+        rbytes, rshapes = _shape_info(rtype)
+        cur.instrs.append(Instr(name, op, rbytes, rshapes, rest))
+        cur.shapes[name] = rshapes
+    return comps
+
+
+def _trip_count(cond: Comp) -> int:
+    consts = []
+    for ins in cond.instrs:
+        consts += [int(c) for c in _CONST.findall(ins.rest)]
+        consts += [int(c) for c in _CONST.findall(ins.op)]
+    # also catch "%constant.39 = s32[] constant(5)" lines where op=="constant"
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"^\s*(\d+)\)?", ins.rest)
+            if m:
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def multiplicities(comps: dict[str, Comp], entry: str) -> dict[str, float]:
+    """Execution count per computation, walking while/calls links."""
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(cname: str, m: float, depth: int = 0) -> None:
+        if cname not in comps or m <= 0 or depth > 32:
+            return
+        mult[cname] += m
+        comp = comps[cname]
+        for ins in comp.instrs:
+            if ins.op == "while":
+                lm = _WHILE_LINKS.search(ins.rest)
+                if lm:
+                    cond_name, body_name = lm.group(1), lm.group(2)
+                    tm = _TRIP.search(ins.rest)   # XLA's own annotation
+                    trips = (int(tm.group(1)) if tm
+                             else _trip_count(comps.get(cond_name, Comp(""))))
+                    visit(body_name, m * trips, depth + 1)
+                    visit(cond_name, m * (trips + 1), depth + 1)
+            elif ins.op in ("fusion", "call", "custom-call", "conditional",
+                            "reduce", "sort", "scatter", "map",
+                            "async-start"):
+                for sub in _CALLS.findall(ins.rest):
+                    if sub != cname:
+                        visit(sub, m, depth + 1)
+
+    visit(entry, 1.0)
+    return dict(mult)
+
+
+def _entry_name(comps: dict[str, Comp], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+def _dot_flops(comp: Comp, ins: Instr) -> float:
+    """2 × numel(result) × K, K from lhs contracting dims."""
+    if not ins.result_shapes:
+        return 0.0
+    _, rdims = ins.result_shapes[0]
+    numel = 1
+    for d in rdims:
+        numel *= d
+    ops = _OPERAND.findall(ins.rest.split(")")[0])
+    k = 1
+    cm = _CONTRACT.search(ins.rest)
+    if ops and cm and ops[0] in comp.shapes and comp.shapes[ops[0]]:
+        _, ldims = comp.shapes[ops[0]][0]
+        for ci in (int(x) for x in cm.group(1).split(",") if x):
+            if ci < len(ldims):
+                k *= ldims[ci]
+    return 2.0 * numel * k
+
+
+def analyze(text: str) -> dict:
+    comps = parse_computations(text)
+    entry = _entry_name(comps, text)
+    mult = multiplicities(comps, entry)
+
+    dot_flops = 0.0
+    coll = {c: 0.0 for c in _COLLECTIVES}
+    coll_count = 0.0
+    result_bytes = 0.0
+    fusion_bodies: set[str] = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                fusion_bodies.update(_CALLS.findall(ins.rest))
+
+    for cname, m in mult.items():
+        comp = comps[cname]
+        in_fusion = cname in fusion_bodies
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                dot_flops += m * _dot_flops(comp, ins)
+            base = None
+            for c in _COLLECTIVES:
+                if ins.op == c or ins.op.startswith(c + "-start"):
+                    base = c
+                    break
+            if base is not None:
+                coll[base] += m * ins.result_bytes
+                coll_count += m
+            if not in_fusion and ins.op not in ("parameter", "constant",
+                                                "get-tuple-element", "tuple",
+                                                "bitcast"):
+                result_bytes += m * ins.result_bytes
+
+    return {
+        "dot_flops": dot_flops,
+        "collective_bytes": coll,
+        "collective_total": sum(coll.values()),
+        "collective_count": coll_count,
+        "result_bytes": result_bytes,
+        "n_computations": len(comps),
+        "n_while": sum(1 for c in comps.values()
+                       for i in c.instrs if i.op == "while"),
+    }
+
+
+def top_collectives(text: str, n: int = 12) -> list[str]:
+    """The n largest collectives (with multiplicity) — perf-loop helper."""
+    comps = parse_computations(text)
+    entry = _entry_name(comps, text)
+    mult = multiplicities(comps, entry)
+    rows = []
+    for cname, m in mult.items():
+        for ins in comps[cname].instrs:
+            if any(ins.op == c or ins.op.startswith(c + "-start")
+                   for c in _COLLECTIVES):
+                rows.append((m * ins.result_bytes, m, ins.op, ins.name,
+                             cname))
+    rows.sort(reverse=True)
+    return [f"{b/2**30:8.2f} GiB  x{int(m):4d}  {op:20s} {name} @{c}"
+            for b, m, op, name, c in rows[:n]]

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state. The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE importing jax;
+everything else (tests, benches) sees the real single CPU device and builds
+1×1 meshes via :func:`make_local_mesh`.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod; multi-pod adds a leading pod axis (2 pods).
+
+    Axis semantics: ``pod`` = cross-pod DP over DCN; ``data`` = in-pod DP +
+    FSDP; ``model`` = TP/EP over ICI.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — run "
+            "under launch/dryrun.py (it forces 512 host devices) or on a pod")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the real local devices (CPU tests / examples)."""
+    n = data * model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:n])

@@ -1,0 +1,59 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these. Modality frontends are stubs per the assignment: whisper gets
+precomputed frame embeddings, llama-vision gets patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as M
+
+Pytree = Any
+
+
+def batch_specs_for(cfg: ModelConfig, shape: InputShape) -> Pytree:
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model),
+                                               dt)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct((B, cfg.n_patches,
+                                                 cfg.d_model), dt)
+    return batch
+
+
+def decode_specs_for(cfg: ModelConfig, shape: InputShape) -> tuple[Pytree, Pytree]:
+    """(state_specs, token_specs) for one serve_step with a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    state = jax.eval_shape(lambda: M.init_decode_state(cfg, B, S))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return state, tokens
+
+
+def params_specs_for(cfg: ModelConfig) -> Pytree:
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Pytree]:
+    """Everything the chosen step consumes, as ShapeDtypeStructs."""
+    out = {"params": params_specs_for(cfg)}
+    if shape.kind in ("train", "prefill"):
+        out["batch"] = batch_specs_for(cfg, shape)
+    if shape.kind == "decode":
+        state, tokens = decode_specs_for(cfg, shape)
+        out["state"], out["tokens"] = state, tokens
+    return out

@@ -1,0 +1,131 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Train/prefill: the latent ``c_kv`` is expanded to per-head keys/values
+(standard formulation). Decode: the **absorbed** formulation — queries are
+folded through ``W_uk`` into latent space so the per-token cache is only
+``kv_lora_rank + rope_dim`` floats (the whole point of MLA: a 576-wide cache
+instead of H*(192+128)), and attention runs directly against the latent cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import (NEG_INF, apply_rope, attention, init_linear,
+                                 rms_norm)
+
+Pytree = Any
+
+
+def init_mla(key: jax.Array, cfg: ModelConfig, dtype, n_layers: int = 1) -> Pytree:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": init_linear(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "wq_b": init_linear(ks[1], m.q_lora_rank, H * m.qk_head_dim, dtype),
+        "wkv_a": init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                             dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "wkv_b": init_linear(ks[3], m.kv_lora_rank,
+                             H * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": init_linear(ks[4], H * m.v_head_dim, d, dtype,
+                          scale=1.0 / np.sqrt(H * m.v_head_dim)
+                          / np.sqrt(2.0 * n_layers)),
+    }
+
+
+def _queries(cfg: ModelConfig, p: Pytree, x: jax.Array, positions: jax.Array):
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(B, S, H, m.qk_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(cfg: ModelConfig, p: Pytree, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    kv_a = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope                        # (B,S,kv_lora), (B,S,rope)
+
+
+def mla_attention(cfg: ModelConfig, p: Pytree, x: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    """Full-sequence causal MLA (train / prefill)."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    q_nope, q_rope = _queries(cfg, p, x, positions)
+    c_kv, k_rope = _latents(cfg, p, x, positions)
+    kv = (c_kv @ p["wkv_b"]).reshape(B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (B, S, H, m.qk_rope_head_dim))],
+                        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = attention(q, k, v, q_pos=positions, k_pos=positions, causal=True,
+                  softmax_scale=m.qk_head_dim ** -0.5)
+    return o.reshape(B, S, H * m.v_head_dim) @ p["wo"]
+
+
+def mla_prefill_cache(cfg: ModelConfig, p: Pytree, x: jax.Array,
+                      positions: jax.Array, max_seq: int) -> Pytree:
+    """Latent cache for decode, zero-padded to ``max_seq``."""
+    B, S, _ = x.shape
+    c_kv, k_rope = _latents(cfg, p, x, positions)
+    pad = max_seq - S
+    return {"c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+            "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))}
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Pytree:
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype)}
+
+
+def mla_decode(cfg: ModelConfig, p: Pytree, x: jax.Array, cache: Pytree,
+               pos: jax.Array) -> tuple[jax.Array, Pytree]:
+    """Absorbed-form single-token decode. x: (B, 1, d); pos: (B,)."""
+    m, H = cfg.mla, cfg.n_heads
+    B = x.shape[0]
+    positions = pos[:, None]
+    q_nope, q_rope = _queries(cfg, p, x, positions)      # (B,1,H,·)
+    c_new, kr_new = _latents(cfg, p, x, positions)       # (B,1,·)
+
+    bidx = jnp.arange(B)
+    c_kv = cache["c_kv"].at[bidx, pos].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[bidx, pos].set(
+        kr_new[:, 0].astype(cache["k_rope"].dtype))
+
+    # absorb W_uk into the query: q̃_h = q_nope_h @ W_uk_h  -> latent space
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[:, :, : m.qk_nope_head_dim]             # (c, H, nope)
+    w_uv = wkv_b[:, :, m.qk_nope_head_dim:]              # (c, H, v)
+    q_lat = jnp.einsum("bhd,chd->bhc", q_nope[:, 0], w_uk)
+
+    S = c_kv.shape[1]
+    scores = (jnp.einsum("bhc,bsc->bhs", q_lat, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0], k_rope,
+                           preferred_element_type=jnp.float32))
+    scores = scores * (m.qk_head_dim ** -0.5)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    scores = scores + jnp.where(valid, 0.0, NEG_INF)[:, None, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsc->bhc", probs.astype(c_kv.dtype), c_kv)
+    o = jnp.einsum("bhc,chv->bhv", o_lat, w_uv)          # (B,H,v)
+    out = o.reshape(B, 1, H * m.v_head_dim) @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

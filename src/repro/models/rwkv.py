@@ -1,0 +1,149 @@
+"""RWKV-6 "Finch" block — attention-free, data-dependent decay.
+
+Faithful structure: token-shift with data-dependent lerp (low-rank), per-channel
+decay ``w = exp(-exp(·))`` produced by a LoRA head, the WKV matrix-state
+recurrence with first-token bonus ``u``, per-head group norm, silu gate, and
+the squared-ReLU channel-mix. (Low-rank sizes follow the 1.6B release.)
+
+The recurrence runs as ``lax.scan`` over time with an (B, H, K, V) f32 state —
+on TPU this lowers to a fused while-loop; FLOPs are negligible next to the
+channel mix so the scan is not the roofline term (see EXPERIMENTS §Roofline).
+Decode is the same step function applied once.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_linear, uniform_scale_init
+
+Pytree = Any
+
+TM_LORA = 32      # token-shift lerp low-rank
+W_LORA = 64       # decay low-rank
+
+
+def rwkv_dims(cfg: ModelConfig) -> tuple[int, int]:
+    K = cfg.rwkv_head_dim
+    assert cfg.d_model % K == 0
+    return cfg.d_model // K, K      # (heads, head_dim)
+
+
+def init_rwkv_block(key: jax.Array, cfg: ModelConfig, dtype,
+                    n_layers: int = 1) -> Pytree:
+    d = cfg.d_model
+    H, K = rwkv_dims(cfg)
+    ks = jax.random.split(key, 16)
+    out_scale = 1.0 / np.sqrt(d) / np.sqrt(2.0 * n_layers)
+    return {
+        "tm": {  # time-mix (wkv) ------------------------------------------------
+            "mu": uniform_scale_init(ks[0], (5, d), dtype, 0.5),
+            "tm_w1": init_linear(ks[1], d, 5 * TM_LORA, dtype),
+            "tm_w2": uniform_scale_init(ks[2], (5, TM_LORA, d), dtype),
+            "w0": jnp.full((d,), -2.0, jnp.float32),
+            "w_w1": init_linear(ks[3], d, W_LORA, dtype),
+            "w_w2": uniform_scale_init(ks[4], (W_LORA, d), dtype),
+            "wr": init_linear(ks[5], d, d, dtype),
+            "wk": init_linear(ks[6], d, d, dtype),
+            "wv": init_linear(ks[7], d, d, dtype),
+            "wg": init_linear(ks[8], d, d, dtype),
+            "u": uniform_scale_init(ks[9], (H, K), jnp.float32, 0.3),
+            "gn": jnp.zeros((d,), dtype),       # per-head group-norm gain
+            "wo": init_linear(ks[10], d, d, dtype, scale=out_scale),
+        },
+        "cm": {  # channel-mix ---------------------------------------------------
+            "mu_k": uniform_scale_init(ks[11], (d,), dtype, 0.5),
+            "mu_r": uniform_scale_init(ks[12], (d,), dtype, 0.5),
+            "wk": init_linear(ks[13], d, cfg.d_ff, dtype),
+            "wv": init_linear(ks[14], cfg.d_ff, d, dtype, scale=out_scale),
+            "wr": init_linear(ks[15], d, d, dtype),
+        },
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """x_{t-1} along the sequence; ``last`` carries across decode steps."""
+    if last is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Pytree, x: jax.Array, xp: jax.Array):
+    """Data-dependent lerp producing the 5 mixed inputs (r, k, v, w, g)."""
+    delta = xp - x
+    base = x + delta * p["mu"][0]                              # shared pre-mix
+    lora = jnp.tanh(base @ p["tm_w1"])                         # (B,S,5*rank)
+    lora = lora.reshape(*lora.shape[:-1], 5, TM_LORA)
+    adj = jnp.einsum("bsfr,frd->bsfd", lora, p["tm_w2"])       # (B,S,5,d)
+    mixed = x[..., None, :] + delta[..., None, :] * (p["mu"][None, None]
+                                                     + adj)
+    return [mixed[..., i, :] for i in range(5)]                # r,k,v,w,g
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """WKV recurrence. r/k/w: (B,S,H,K); v: (B,S,H,V); state: (B,H,K,V) f32.
+
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                  # (B,H,K)/(B,H,V)
+        kv = kt[..., :, None] * vt[..., None, :]              # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    state, outs = jax.lax.scan(step, state, xs)
+    return state, outs.transpose(1, 0, 2, 3)                  # (B,S,H,V)
+
+
+def _group_norm(x: jax.Array, gain: jax.Array, H: int, eps: float) -> jax.Array:
+    """Per-head layer norm of (B, S, d) viewed as (B, S, H, K)."""
+    B, S, d = x.shape
+    xh = x.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, S, d) * (1.0 + gain.astype(jnp.float32))).astype(x.dtype)
+
+
+def time_mix(cfg: ModelConfig, p: Pytree, x: jax.Array, *,
+             last_x: jax.Array | None = None,
+             state: jax.Array | None = None):
+    """RWKV time-mix. Returns (out, new_last_x, new_state)."""
+    B, S, d = x.shape
+    H, K = rwkv_dims(cfg)
+    xp = _shift(x, last_x)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xp)
+    r = (xr @ p["wr"]).reshape(B, S, H, K)
+    k = (xk @ p["wk"]).reshape(B, S, H, K)
+    v = (xv @ p["wv"]).reshape(B, S, H, K)
+    g = jax.nn.silu(xg @ p["wg"])
+    w_log = p["w0"] + jnp.tanh(xw @ p["w_w1"]).astype(jnp.float32) @ \
+        p["w_w2"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, S, H, K)           # (0,1)
+
+    if state is None:
+        state = jnp.zeros((B, H, K, K), jnp.float32)
+    state, out = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), w, p["u"], state)
+    out = _group_norm(out.reshape(B, S, d).astype(x.dtype), p["gn"], H,
+                      cfg.norm_eps) * g
+    return out @ p["wo"], x[:, -1, :], state
+
+
+def channel_mix(cfg: ModelConfig, p: Pytree, x: jax.Array, *,
+                last_x: jax.Array | None = None):
+    xp = _shift(x, last_x)
+    xk = x + (xp - x) * p["mu_k"]
+    xr = x + (xp - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1, :]

@@ -1,0 +1,191 @@
+"""Mamba2 (SSD) block — the zamba2-7b backbone.
+
+Chunked SSD algorithm (Dao & Gu, 2024) adapted for TPU: the sequence is
+processed in chunks of ``CHUNK``; within a chunk the recurrence is computed as
+a masked quadratic form (MXU-friendly einsums — this is the TPU-native
+formulation, replacing the CUDA selective-scan kernel), and a small carried
+state (B, H, P, N) links chunks through an ordinary ``lax.scan``. The decay
+matrix is built as ``exp(l_t - l_s)`` with ``l`` a within-chunk cumulative
+log-decay — differences are ≤ 0, so no overflow.
+
+Decode is the O(1) recurrent step on (conv window, SSM state).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_linear, rms_norm
+
+Pytree = Any
+CHUNK = 128
+
+
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim P, state N)."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    assert d_in % P == 0
+    return d_in, d_in // P, P, cfg.ssm_state
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig, dtype,
+                n_layers: int = 1) -> Pytree:
+    d = cfg.d_model
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "in_proj": init_linear(ks[0], d, 2 * d_in + 2 * N + H, dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch),
+                                           jnp.float32)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": init_linear(ks[2], d_in, d, dtype,
+                                scale=1.0 / np.sqrt(d_in) / np.sqrt(2.0 * n_layers)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_in, H, P, N = ssm_dims(cfg)
+    z, xc, Bc, Cc, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xc, Bc, Cc, dt
+
+
+def _conv1d(w: jax.Array, b: jax.Array, x: jax.Array,
+            state: jax.Array | None = None):
+    """Depthwise causal conv, width K. x: (B, S, C). state: (B, K-1, C)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return out, new_state
+
+
+def mamba2_block(cfg: ModelConfig, p: Pytree, x: jax.Array,
+                 return_state: bool = False):
+    """Full-sequence (train/prefill) Mamba2 mixer. x: (B, S, d) -> (B, S, d).
+
+    With ``return_state`` also returns the exact decode state {conv, ssm}
+    after the last token (padding is state-neutral: padded ``loga``/``dt`` are
+    zero => decay 1, no input contribution).
+    """
+    B, S, _ = x.shape
+    d_in, H, P, N = ssm_dims(cfg)
+    z, xc, Bc, Cc, dt = _split_proj(cfg, x @ p["in_proj"])
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    Kc = cfg.ssm_conv - 1
+    if S >= Kc:
+        conv_tail = conv_in[:, -Kc:, :].astype(jnp.float32)
+    else:  # tiny smoke-test sequences
+        conv_tail = jnp.pad(conv_in.astype(jnp.float32),
+                            ((0, 0), (Kc - S, 0), (0, 0)))
+    conv_out, _ = _conv1d(p["conv_w"], p["conv_b"], conv_in)
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                         # (H,)
+    loga = (A * dt)                                                  # (B,S,H) <= 0
+
+    # pad to a chunk multiple
+    Q = min(CHUNK, S)
+    pad = (-S) % Q
+    if pad:
+        def padn(a):
+            return jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xc, Bc, Cc, dt, loga = map(padn, (xc, Bc, Cc, dt, loga))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xh = xc.reshape(B, nc, Q, H, P)
+    Bg = Bc.reshape(B, nc, Q, N)
+    Cg = Cc.reshape(B, nc, Q, N)
+    dtg = dt.reshape(B, nc, Q, H)
+    lg = loga.reshape(B, nc, Q, H)
+
+    def chunk_step(h, inp):
+        xq, bq, cq, dq, lq = inp                     # (B,Q,...) one chunk
+        l = jnp.cumsum(lq, axis=1)                   # (B,Q,H) inclusive
+        # decay matrix exp(l_t - l_s), s<=t  (differences <= 0). Mask BEFORE
+        # the exp: the s>t half has POSITIVE diffs that overflow to inf, and
+        # where(mask, inf, 0) backprops 0*inf = NaN.
+        Ldiff = l[:, :, None, :] - l[:, None, :, :]  # (B,Q,Q,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.exp(jnp.where(mask[None, :, :, None], Ldiff, -1e30))
+        cb = jnp.einsum("btn,bsn->bts", cq, bq,
+                        preferred_element_type=jnp.float32)  # (B,Q,Q)
+        # intra-chunk
+        y = jnp.einsum("bts,bhts,bsh,bshp->bthp",
+                       cb, L.transpose(0, 3, 1, 2), dq,
+                       xq.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        y = y + jnp.einsum("btn,bth,bhpn->bthp", cq, jnp.exp(l), h)
+        # state update
+        decay_to_end = jnp.exp(l[:, -1:, :] - l)     # (B,Q,H)
+        dx = xq.astype(jnp.float32) * (dq * decay_to_end)[..., None]
+        h_new = (jnp.exp(l[:, -1])[:, :, None, None] * h
+                 + jnp.einsum("bshp,bsn->bhpn", dx, bq))
+        return h_new, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_fin, ys = jax.lax.scan(chunk_step, h0,
+                             (xh.transpose(1, 0, 2, 3, 4),
+                              Bg.transpose(1, 0, 2, 3),
+                              Cg.transpose(1, 0, 2, 3),
+                              dtg.transpose(1, 0, 2, 3),
+                              lg.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, P)[:, :S]
+    y = y + p["D"][None, None, :, None] * xc.reshape(B, Sp, H, P)[:, :S]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"conv": conv_tail, "ssm": h_fin}
+    return out
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int) -> Pytree:
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), jnp.float32),
+            "ssm": jnp.zeros((batch, H, P, N), jnp.float32)}
+
+
+def mamba2_step(cfg: ModelConfig, p: Pytree, state: Pytree, x: jax.Array
+                ) -> tuple[jax.Array, Pytree]:
+    """One-token decode. x: (B, 1, d)."""
+    B = x.shape[0]
+    d_in, H, P, N = ssm_dims(cfg)
+    z, xc, Bc, Cc, dt = _split_proj(cfg, x @ p["in_proj"])
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)      # (B,1,C)
+    conv_out, conv_state = _conv1d(p["conv_w"], p["conv_b"], conv_in,
+                                   state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                             # (B,H)
+    xh = xc[:, 0].reshape(B, H, P).astype(jnp.float32)
+    h = (state["ssm"] * a[:, :, None, None]
+         + jnp.einsum("bhp,bn,bh->bhpn", xh, Bc[:, 0].astype(jnp.float32), dt))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc[:, 0].astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"conv": conv_state.astype(jnp.float32),
+                               "ssm": h}

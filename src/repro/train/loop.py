@@ -1,0 +1,148 @@
+"""The training loop: data prefetch + jitted step + async checkpoint +
+elastic restart. This is the end-to-end driver examples/train_lm.py uses.
+
+Fault-tolerance contract:
+  * checkpoint every ``ckpt_every`` steps, asynchronously (one in flight);
+  * ``simulate_failure_at`` kills the in-memory state at that step — the loop
+    then restores from the latest checkpoint (possibly onto a different mesh:
+    elastic restart) and continues; steps since the last checkpoint re-run;
+  * the data pipeline is deterministic-by-step, so restarts replay the exact
+    batches (no data loss / duplication beyond the rolled-back steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import PrefetchingLoader, SyntheticCorpus
+from repro.models import model as M
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 50
+    batch: int = 8
+    seq: int = 64
+    ckpt_every: int = 20
+    ckpt_dir: str | None = None
+    prefetch_depth: int = 2
+    log_every: int = 10
+    simulate_failure_at: int | None = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list[float]
+    steps_done: int
+    restarts: int
+    wall_seconds: float
+    data_waits: int
+
+
+def extras_fn(cfg: ModelConfig, batch_np: dict, rng: np.random.Generator
+              ) -> dict:
+    """Attach stub modality inputs (frames/patches) where the family needs."""
+    out = dict(batch_np)
+    B = batch_np["tokens"].shape[0]
+    if cfg.family == "encdec":
+        out["frames"] = rng.standard_normal(
+            (B, cfg.n_frames, cfg.d_model), np.float32).astype(np.float32)
+    if cfg.family == "vlm":
+        out["patches"] = rng.standard_normal(
+            (B, cfg.n_patches, cfg.d_model), np.float32).astype(np.float32)
+    return out
+
+
+def train(cfg: ModelConfig, tc: TrainConfig,
+          opt_cfg: OptConfig | None = None,
+          on_step: Callable[[int, dict], None] | None = None) -> TrainResult:
+    opt_cfg = opt_cfg or OptConfig(warmup_steps=10, total_steps=tc.steps)
+    cfg.validate()
+    rng = np.random.default_rng(tc.seed)
+
+    params = M.init_params(cfg, jax.random.PRNGKey(tc.seed))
+    opt_state = init_opt_state(opt_cfg, params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+
+    corpus = SyntheticCorpus(cfg.vocab, seed=tc.seed)
+    checkpointer = (ckpt.AsyncCheckpointer(tc.ckpt_dir)
+                    if tc.ckpt_dir else None)
+
+    losses: list[float] = []
+    restarts = 0
+    failed_once = False
+    step = 0
+    data_waits = 0
+    t0 = time.perf_counter()
+
+    def make_loader(start: int) -> PrefetchingLoader:
+        it = corpus.batches(tc.batch, tc.seq, start_step=start)
+        return PrefetchingLoader(
+            (extras_fn(cfg, b, np.random.default_rng((tc.seed, i + start)))
+             for i, b in enumerate(it)),
+            depth=tc.prefetch_depth)
+
+    loader = make_loader(0)
+    try:
+        while step < tc.steps:
+            if (tc.simulate_failure_at is not None and not failed_once
+                    and step == tc.simulate_failure_at):
+                # ---- simulated node failure: lose in-memory state ---------
+                failed_once = True
+                del params, opt_state
+                if checkpointer:
+                    checkpointer.wait()
+                restore_step = ckpt.latest_step(tc.ckpt_dir)
+                if restore_step is None:
+                    # failed before the first checkpoint: cold restart —
+                    # deterministic init + data pipeline replay from step 0
+                    params = M.init_params(cfg, jax.random.PRNGKey(tc.seed))
+                    opt_state = init_opt_state(opt_cfg, params)
+                    restore_step = 0
+                else:
+                    tgt_p = jax.eval_shape(
+                        lambda: M.init_params(cfg,
+                                              jax.random.PRNGKey(tc.seed)))
+                    tgt_o = jax.eval_shape(
+                        lambda: init_opt_state(opt_cfg, tgt_p))
+                    state = ckpt.restore(tc.ckpt_dir, restore_step,
+                                         target={"p": tgt_p, "o": tgt_o})
+                    params, opt_state = state["p"], state["o"]
+                step = restore_step
+                restarts += 1
+                loader.close()
+                loader = make_loader(step)
+                continue
+
+            batch = next(loader)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            step += 1
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"loss diverged at step {step}")
+            if on_step:
+                on_step(step, metrics)
+            if checkpointer and step % tc.ckpt_every == 0:
+                checkpointer.save_async({"p": params, "o": opt_state}, step)
+        if checkpointer:
+            checkpointer.wait()
+    finally:
+        data_waits = loader.waits
+        loader.close()
+
+    return TrainResult(losses=losses, steps_done=step, restarts=restarts,
+                       wall_seconds=time.perf_counter() - t0,
+                       data_waits=data_waits)

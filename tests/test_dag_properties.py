@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) for the workflow compiler's analyses,
+with networkx as the independent oracle."""
+
+import networkx as nx
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compile_workflow, HPC_CLUSTER
+from repro.core.dag import TaskGraph
+from repro.core.workloads import random_layered_workflow
+
+
+@st.composite
+def layered_graphs(draw):
+    layers = draw(st.integers(2, 6))
+    width = draw(st.integers(2, 8))
+    seed = draw(st.integers(0, 10_000))
+    fan = draw(st.integers(1, 4))
+    return random_layered_workflow(layers, width, seed=seed, fan_in=fan)
+
+
+def to_nx(g: TaskGraph) -> nx.DiGraph:
+    ng = nx.DiGraph()
+    ng.add_nodes_from(g.tasks)
+    for tid in g.tasks:
+        for s in g.successors(tid):
+            ng.add_edge(tid, s)
+    return ng
+
+
+@given(layered_graphs())
+@settings(max_examples=25, deadline=None)
+def test_topo_order_valid(g):
+    order = g.topo_order()
+    assert sorted(order) == sorted(g.tasks)
+    pos = {t: i for i, t in enumerate(order)}
+    for tid in g.tasks:
+        for s in g.successors(tid):
+            assert pos[tid] < pos[s]
+
+
+@given(layered_graphs())
+@settings(max_examples=25, deadline=None)
+def test_upward_rank_matches_networkx_longest_path(g):
+    """rank(t) with unit costs == longest path (in nodes) from t to a sink."""
+    rank = g.upward_rank(cost=lambda t: 1.0)
+    ng = to_nx(g)
+    # longest path from t == 1 + max over successors
+    expected = {}
+    for t in reversed(list(nx.topological_sort(ng))):
+        succ = [expected[s] for s in ng.successors(t)]
+        expected[t] = 1.0 + (max(succ) if succ else 0.0)
+    assert rank == expected
+
+
+@given(layered_graphs())
+@settings(max_examples=25, deadline=None)
+def test_critical_path_is_consistent(g):
+    path, total = g.critical_path()
+    rank = g.upward_rank()
+    # path starts at the max-rank task and walks monotonically down
+    assert abs(rank[path[0]] - total) < 1e-9
+    for a, b in zip(path, path[1:]):
+        assert b in set(g.successors(a))
+    # path weight equals total
+    costs = [g.tasks[t].est_seconds or 1.0 for t in path]
+    assert abs(sum(costs) - total) < 1e-6 * max(1.0, total)
+
+
+@given(layered_graphs())
+@settings(max_examples=25, deadline=None)
+def test_size_propagation_conservation(g):
+    """Every dataset gets a size; io_ratio math is respected per task."""
+    wf = compile_workflow(g, HPC_CLUSTER)
+    for name, size in wf.sizes.items():
+        assert size >= 0
+    for tid, t in g.tasks.items():
+        in_bytes = sum(wf.sizes[n] for n in t.inputs)
+        for out in t.outputs:
+            d = g.data[out]
+            if d.is_external:
+                continue
+            expected = t.hints.ratio_for(out) * (
+                in_bytes / max(len(t.outputs), 1)
+                if len(t.outputs) > 1 else in_bytes)
+            assert abs(wf.sizes[out] - expected) <= 1e-6 * max(1.0, expected)
+
+
+@given(layered_graphs())
+@settings(max_examples=25, deadline=None)
+def test_earliest_start_monotone_along_edges(g):
+    wf = compile_workflow(g, HPC_CLUSTER)
+    es = wf.earliest_start
+    for tid in g.tasks:
+        for s in g.successors(tid):
+            assert es[s] >= es[tid] + wf.est_seconds[tid] - 1e-9
+
+
+@given(layered_graphs(), st.integers(2, 32))
+@settings(max_examples=15, deadline=None)
+def test_simulation_invariants(g, n_nodes):
+    """Makespan bounds & byte accounting hold on random DAGs/cluster sizes."""
+    from repro.core import ProactiveScheduler, simulate
+    wf = compile_workflow(g, HPC_CLUSTER)
+    r = simulate(wf, ProactiveScheduler, n_nodes=n_nodes, hw=HPC_CLUSTER)
+    assert r.tasks_done == len(g.tasks)
+    # lower bound: critical path compute; no I/O can make it faster
+    assert r.makespan >= wf.critical_seconds * 0.999
+    assert r.bytes_local >= 0 and r.bytes_moved >= 0
+    assert r.io_wait_max <= r.io_wait_total + 1e-9

@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import decode_attention_op, window_slice
+
+RNG = np.random.default_rng(42)
+
+
+def mk(shape, dtype):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+def max_err(a, b):
+    return float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+
+
+FLASH_CASES = [
+    # B, Sq, Sk, Hq, Hkv, hd, causal, window, off
+    (2, 128, 128, 4, 2, 64, True, 0, 0),
+    (1, 100, 100, 4, 4, 72, True, 0, 0),       # unaligned seq + head dim
+    (2, 64, 192, 8, 2, 64, True, 0, 128),      # suffix prefill offset
+    (2, 256, 256, 4, 2, 64, True, 64, 0),      # sliding window (gemma local)
+    (1, 96, 160, 2, 2, 48, False, 0, 0),       # bidirectional (encoder)
+    (1, 64, 64, 8, 1, 128, True, 0, 0),        # MQA
+    (2, 80, 80, 6, 3, 240, True, 0, 0),        # gemma3-12b head dim
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES,
+                         ids=[f"flash{i}" for i in range(len(FLASH_CASES))])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_flash_attention_matches_ref(case, dtype):
+    B, Sq, Sk, Hq, Hkv, hd, causal, win, off = case
+    q, k, v = (mk((B, Sq, Hq, hd), dtype), mk((B, Sk, Hkv, hd), dtype),
+               mk((B, Sk, Hkv, hd), dtype))
+    out = flash_attention(q, k, v, causal=causal, window=win, q_offset=off,
+                          interpret=True, block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=win,
+                                   q_offset=off)
+    tol = 0.05 if dtype == jnp.bfloat16 else 2e-5
+    assert max_err(out, want) < tol
+
+
+@pytest.mark.parametrize("block_q,block_k", [(16, 16), (32, 64), (128, 128)])
+def test_flash_attention_block_shape_invariance(block_q, block_k):
+    q, k, v = (mk((1, 130, 4, 64), jnp.float32),
+               mk((1, 130, 2, 64), jnp.float32),
+               mk((1, 130, 2, 64), jnp.float32))
+    out = flash_attention(q, k, v, causal=True, interpret=True,
+                          block_q=block_q, block_k=block_k)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    assert max_err(out, want) < 2e-5
+
+
+DECODE_CASES = [
+    # B, S, Hq, Hkv, hd, window
+    (2, 256, 4, 2, 64, 0),
+    (2, 300, 8, 8, 80, 0),        # unaligned cache + head dim
+    (3, 512, 4, 2, 64, 128),      # sliding window decode
+    (1, 64, 2, 1, 32, 16),
+    (2, 1024, 16, 2, 128, 0),     # long cache, high group count
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES,
+                         ids=[f"dec{i}" for i in range(len(DECODE_CASES))])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_decode_attention_matches_ref(case, dtype):
+    B, S, Hq, Hkv, hd, win = case
+    q = mk((B, Hq, hd), dtype)
+    kc, vc = mk((B, S, Hkv, hd), dtype), mk((B, S, Hkv, hd), dtype)
+    lengths = jnp.asarray(RNG.integers(1, S + 1, (B,)), jnp.int32)
+    out = decode_attention(q, kc, vc, lengths, window=win, interpret=True,
+                           block_k=64)
+    want = ref.decode_attention_ref(q, kc, vc, lengths, window=win)
+    tol = 0.05 if dtype == jnp.bfloat16 else 2e-5
+    assert max_err(out, want) < tol
+
+
+def test_decode_length_one_edge():
+    q = mk((1, 2, 64), jnp.float32)
+    kc, vc = mk((1, 128, 2, 64), jnp.float32), mk((1, 128, 2, 64), jnp.float32)
+    lengths = jnp.asarray([1], jnp.int32)
+    out = decode_attention(q, kc, vc, lengths, interpret=True, block_k=32)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    assert max_err(out, want) < 2e-5
+
+
+@pytest.mark.parametrize("S,W,lens", [
+    (1024, 100, [900, 310]), (1024, 100, [50, 1024]),
+    (512, 512, [512, 33]), (256, 300, [100, 256]),
+])
+def test_window_slice_equivalence(S, W, lens):
+    """Sliced-cache decode == full-cache windowed decode (the long-context
+    decode optimization for sliding-window layers)."""
+    B, H, hd = 2, 2, 64
+    kc, vc = mk((B, S, H, hd), jnp.float32), mk((B, S, H, hd), jnp.float32)
+    q = mk((B, 4, hd), jnp.float32)
+    lengths = jnp.asarray(lens, jnp.int32)
+    ks, lk = window_slice(kc, lengths, W, block=128)
+    vs, _ = window_slice(vc, lengths, W, block=128)
+    out = decode_attention_op(q, ks, vs, lk, window=W)
+    want = decode_attention_op(q, kc, vc, lengths, window=W)
+    assert max_err(out, want) < 1e-5
+    assert ks.shape[1] <= min(S, W + 2 * 128)

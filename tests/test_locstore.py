@@ -1,0 +1,105 @@
+"""Unit tests for the location-aware store + distributed location service."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.locstore import (LocStore, LocationService, Placement,
+                                 REMOTE_TIER, SimObject)
+
+
+class TestPlacementControl:
+    def test_s_loc_pins_location(self):
+        st = LocStore(8)
+        p = st.put("a", SimObject(100), loc=3)
+        assert p.real_loc == 3
+        assert st.getxattr("a", "real_loc") == 3
+
+    def test_default_policy_is_consistent_hash(self):
+        st1, st2 = LocStore(8), LocStore(8)
+        p1, p2 = st1.put("x", SimObject(1)), st2.put("x", SimObject(1))
+        assert p1.nodes == p2.nodes          # deterministic, Hercules-like
+
+    def test_out_of_range_rejected(self):
+        st = LocStore(4)
+        with pytest.raises(ValueError):
+            st.put("a", SimObject(1), loc=9)
+
+    def test_xattr_roundtrip(self):
+        st = LocStore(4)
+        st.put("a", SimObject(1), loc=1, xattr={"owner": "task1"})
+        assert st.getxattr("a", "owner") == "task1"
+        assert st.getxattr("a", "size") == 1.0
+
+
+class TestLocalityAccounting:
+    def test_local_hit_vs_remote_fetch(self):
+        st = LocStore(4)
+        st.put("a", SimObject(1000), loc=2)
+        _, t_local = st.get("a", at=2)
+        _, t_far = st.get("a", at=0)
+        assert t_local.local and not t_far.local
+        rep = st.movement_report()
+        assert rep["bytes_local"] == 1000 and rep["bytes_moved"] == 1000
+        assert rep["locality_hit_rate"] == 0.5
+
+    def test_replica_serves_nearest(self):
+        st = LocStore(8)
+        st.put("a", SimObject(10), loc=0)
+        st.replicate("a", [5])
+        _, t = st.get("a", at=5)
+        assert t.local
+
+    def test_migrate_repins_and_counts(self):
+        st = LocStore(4)
+        st.put("a", SimObject(50), loc=0)
+        st.migrate("a", 3)
+        assert st.stat("a").real_loc == 3
+        assert st.migrations == 1
+        assert st.getxattr("a", "migrated_from") == (0,)
+
+    def test_remote_tier(self):
+        st = LocStore(4)
+        st.put("a", SimObject(10), loc=Placement((REMOTE_TIER,), tier="remote"))
+        _, t = st.get("a", at=1)
+        assert t.src == REMOTE_TIER and not t.local
+
+
+class TestLocationService:
+    def test_sharding_is_stable_and_balanced(self):
+        svc = LocationService(16)
+        for i in range(2000):
+            svc.record(f"file{i}", Placement((0,)))
+        bal = svc.load_balance()
+        assert bal["entries"] == 2000
+        # blake2-based placement: no shard more than 3x the mean
+        assert bal["max_shard"] < 3 * (2000 / 16)
+
+    def test_lookup_miss_is_none(self):
+        assert LocationService(4).lookup("nope") is None
+
+    def test_thread_safety(self):
+        st = LocStore(8)
+        errs = []
+
+        def work(k):
+            try:
+                for i in range(200):
+                    st.put(f"{k}_{i}", SimObject(10), loc=k % 8)
+                    st.get(f"{k}_{i}", at=(k + 1) % 8)
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=work, args=(k,)) for k in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        assert len(st.loc.names()) == 1600
+
+    def test_sizeof_jax_numpy(self):
+        st = LocStore(2)
+        st.put("np", np.zeros((10, 10), np.float32))
+        assert st.getxattr("np", "size") == 400.0

@@ -1,0 +1,155 @@
+"""Per-architecture smoke + consistency tests (all 10 assigned archs).
+
+The strongest invariant: for every family, ``prefill(S-1) + decode_step``
+must equal ``prefill(S)`` at the last position — this exercises every cache /
+recurrent-state path (KV caches, MLA absorbed decode, Mamba chunked-vs-step
+equivalence, RWKV state carry, cross-attn caches) against the parallel
+formulation.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_smoke
+from repro.models import (decode_step, init_decode_state, init_params,
+                          loss_fn, param_count, prefill)
+
+S = 24
+B = 2
+
+
+def f32(cfg):
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+def make_batch(cfg, rng, seq=S):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, seq)),
+                                   jnp.int32)}
+    batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_frames, cfg.d_model)), cfg.dtype)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), cfg.dtype)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_shapes_and_finite(arch, rng):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, rng)
+    loss, metrics = jax.jit(lambda p, b: loss_fn(cfg, p, b))(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    assert param_count(cfg) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_gradients_finite_and_nonzero(arch, rng):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, rng)
+    grads = jax.jit(jax.grad(
+        lambda p: loss_fn(cfg, p, batch)[0]))(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves)
+    gnorm = float(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves)) ** 0.5
+    assert gnorm > 1e-6
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_plus_decode_matches_full_prefill(arch, rng):
+    """decode(prefill(S-1), tok_{S-1}) == prefill(S) — the cache invariant.
+
+    MoE archs run with a non-dropping capacity factor: capacity drops are
+    computed over the whole prefill batch but never at decode (batch of 1),
+    so equality only holds when nothing is dropped — the invariant under test
+    is the CACHE path, not capacity semantics."""
+    cfg = f32(get_smoke(arch))
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    batch = make_batch(cfg, rng)
+    max_seq = S + 8
+
+    full_logits, _ = jax.jit(
+        lambda p, b: prefill(cfg, p, b, max_seq))(params, batch)
+
+    short = dict(batch)
+    short["tokens"] = batch["tokens"][:, : S - 1]
+    short["labels"] = batch["labels"][:, : S - 1]
+    _, state = jax.jit(
+        lambda p, b: prefill(cfg, p, b, max_seq))(params, short)
+    step_logits, _ = jax.jit(
+        lambda p, st, t: decode_step(cfg, p, st, t))(
+            params, state, batch["tokens"][:, S - 1: S])
+
+    a = np.asarray(full_logits[:, -1], np.float32)
+    b = np.asarray(step_logits[:, -1], np.float32)
+    # compare normalized log-probs (absolute logits can drift by a constant)
+    a = a - a.max(-1, keepdims=True)
+    b = b - b.max(-1, keepdims=True)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_fresh_decode_state_usable(arch, rng):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    st = init_decode_state(cfg, B, 16)
+    logits, st2 = jax.jit(lambda p, s, t: decode_step(cfg, p, s, t))(
+        params, st, jnp.zeros((B, 1), jnp.int32))
+    assert logits.shape[0] == B and logits.shape[1] == 1
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(st2["pos"][0]) == 1
+
+
+def test_vocab_padding_masks_logits(rng):
+    """granite vocab 49155 -> padded; pad logits must be -inf-ish."""
+    cfg = get_smoke("granite-3-2b")        # vocab=503 -> padded 512
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    st = init_decode_state(cfg, B, 8)
+    logits, _ = decode_step(cfg, params, st, jnp.zeros((B, 1), jnp.int32))
+    pad = np.asarray(logits[..., cfg.vocab:], np.float32)
+    assert (pad < -1e20).all()
+
+
+def test_moe_routing_responds_to_input(rng):
+    """Different tokens must route to different experts (not degenerate)."""
+    from repro.models.moe import moe_ffn
+    from repro.models.moe import init_moe
+    cfg = get_smoke("arctic-480b")
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(1, 16, cfg.d_model)), jnp.float32)
+    out, aux = moe_ffn(cfg, p, x)
+    assert out.shape == x.shape
+    assert float(aux) > 0
+    # permuting tokens permutes outputs (routing is per-token)
+    perm = jnp.asarray([0, 2, 1] + list(range(3, 16)))
+    out_p, _ = moe_ffn(cfg, p, x[:, perm])
+    np.testing.assert_allclose(np.asarray(out[:, perm]), np.asarray(out_p),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_differs_from_full(rng):
+    """gemma local layers actually mask: long-range key must not attend."""
+    import dataclasses as dc
+    cfg = f32(get_smoke("gemma3-12b"))
+    cfg_full = dc.replace(cfg, sliding_window=10_000)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, np.random.default_rng(0), seq=40)
+    l1, _ = loss_fn(cfg, params, batch)
+    l2, _ = loss_fn(cfg_full, params, batch)
+    assert abs(float(l1) - float(l2)) > 1e-6

@@ -1,0 +1,81 @@
+"""End-to-end behaviour tests for the paper's cross-layer system.
+
+Each test is one of the paper's qualitative claims, checked on the simulator
+(the same scheduler objects drive the real executor — see test_executor.py).
+"""
+
+import pytest
+
+from repro.core import (FCFSScheduler, HPC_CLUSTER, LocalityScheduler,
+                        ProactiveScheduler, compile_workflow, simulate)
+from repro.core.workloads import (fig2_workflow, mapreduce_workflow,
+                                  montage_workflow, random_layered_workflow)
+
+
+@pytest.fixture(scope="module")
+def wf_random():
+    return compile_workflow(random_layered_workflow(8, 16, seed=3),
+                            HPC_CLUSTER)
+
+
+def _run(wf, factory, **kw):
+    return simulate(wf, factory, n_nodes=16, hw=HPC_CLUSTER, **kw)
+
+
+class TestPaperClaims:
+    def test_locality_moves_fewer_bytes_than_fcfs(self, wf_random):
+        """Claim: locality-aware scheduling reduces data movement."""
+        fcfs = _run(wf_random, FCFSScheduler)
+        loc = _run(wf_random, LocalityScheduler)
+        assert loc.bytes_moved < 0.8 * fcfs.bytes_moved
+        assert loc.locality_hit_rate > fcfs.locality_hit_rate
+
+    def test_proactive_cuts_io_wait(self, wf_random):
+        """Claim: pipelining inputs ahead of task start hides I/O time."""
+        loc = _run(wf_random, LocalityScheduler)
+        pro = _run(wf_random, ProactiveScheduler)
+        assert pro.io_wait_total < loc.io_wait_total
+        assert pro.bytes_prefetched > 0
+
+    def test_cross_layer_strictly_improves(self, wf_random):
+        """Claim: each added layer helps (FCFS -> +locality -> +proactive)."""
+        fcfs = _run(wf_random, FCFSScheduler)
+        loc = _run(wf_random, LocalityScheduler)
+        pro = _run(wf_random, ProactiveScheduler)
+        assert fcfs.locality_hit_rate < loc.locality_hit_rate \
+            <= pro.locality_hit_rate + 1e-9
+        assert pro.makespan <= fcfs.makespan * 1.01
+
+    @pytest.mark.parametrize("builder", [fig2_workflow,
+                                         lambda: mapreduce_workflow(16, 4),
+                                         lambda: montage_workflow(12)])
+    def test_all_schedulers_complete_all_workflows(self, builder):
+        wf = compile_workflow(builder(), HPC_CLUSTER)
+        for factory in (FCFSScheduler, LocalityScheduler, ProactiveScheduler):
+            r = simulate(wf, factory, n_nodes=8, hw=HPC_CLUSTER)
+            assert r.tasks_done == len(wf.graph.tasks)
+            assert r.makespan > 0
+
+    def test_failure_rerun_completes(self, wf_random):
+        """Node failures re-run lost producers and still finish."""
+        r = simulate(wf_random, ProactiveScheduler, n_nodes=16,
+                     hw=HPC_CLUSTER, failures=[(1.0, 0), (100.0, 3)])
+        assert r.tasks_done == len(wf_random.graph.tasks)
+        assert r.reruns >= 0
+
+    def test_straggler_mitigation_speed_aware(self):
+        """[beyond-paper] speed-aware scoring avoids slow workers."""
+        wf = compile_workflow(random_layered_workflow(6, 12, seed=7),
+                              HPC_CLUSTER)
+        slow = {0: 0.05, 1: 0.05}   # two badly-degraded nodes
+        base = simulate(wf, lambda w: LocalityScheduler(w),
+                        n_nodes=8, hw=HPC_CLUSTER, speeds=slow)
+        aware = simulate(wf, lambda w: LocalityScheduler(w, speed_aware=True),
+                         n_nodes=8, hw=HPC_CLUSTER, speeds=slow)
+        assert aware.makespan < base.makespan
+
+    def test_scales_to_many_nodes(self):
+        """The decision path stays correct (and fast) at 1024+ nodes."""
+        wf = compile_workflow(mapreduce_workflow(256, 16), HPC_CLUSTER)
+        r = simulate(wf, ProactiveScheduler, n_nodes=1024, hw=HPC_CLUSTER)
+        assert r.tasks_done == len(wf.graph.tasks)
