@@ -1,0 +1,76 @@
+"""Shims that present the jax>=0.6 API surface on the pinned jax 0.4.x.
+
+The codebase (and its test suite) is written against the current public jax
+API; two pieces of it moved after 0.4.37:
+
+  * ``jax.shard_map`` — still lives at ``jax.experimental.shard_map.shard_map``
+    and takes ``check_rep`` instead of ``check_vma``;
+  * ``jax.sharding.AbstractMesh(axis_sizes, axis_names)`` — the 0.4.x
+    constructor wants a single ``((name, size), ...)`` tuple.
+
+Importing :mod:`repro` installs these adapters exactly once. Both adapters
+return the *real* jax objects, so everything downstream (isinstance checks
+inside jax, lowering, tree flattening) behaves identically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.sharding as _jshard
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                  check_rep=None, **kwargs):
+        if check_rep is None:
+            # check_vma is the post-0.6 name for check_rep; default False —
+            # the replication checker predates several collectives we use.
+            check_rep = bool(check_vma) if check_vma is not None else False
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_rep, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _install_abstract_mesh() -> None:
+    _AbstractMesh = _jshard.AbstractMesh
+    try:
+        _AbstractMesh((1,), ("x",))
+        return                      # modern signature already supported
+    except (TypeError, ValueError):
+        pass
+
+    class AbstractMesh(_AbstractMesh):
+        """0.4.x AbstractMesh accepting the modern (sizes, names) signature.
+
+        A real subclass, so isinstance checks against either name hold."""
+
+        def __init__(self, axis_sizes, axis_names=None, **kwargs):
+            if axis_names is not None:
+                axis_sizes = tuple(zip(axis_names, axis_sizes))
+            super().__init__(axis_sizes, **kwargs)
+
+    _jshard.AbstractMesh = AbstractMesh
+
+
+def _install_pallas_compiler_params() -> None:
+    try:
+        import jax.experimental.pallas.tpu as pltpu
+    except ImportError:                      # pallas not built on this platform
+        return
+    if not hasattr(pltpu, "CompilerParams") and \
+            hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+def install() -> None:
+    _install_shard_map()
+    _install_abstract_mesh()
+    _install_pallas_compiler_params()

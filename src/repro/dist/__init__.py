@@ -1,0 +1,16 @@
+"""repro.dist — the runtime layer of the cross-layer design.
+
+The paper's compiler layer (:mod:`repro.core.hints` / ``wfcompiler``) decides
+*what* should move; this package is the runtime that binds those decisions to
+device placement:
+
+  sharding     divisibility-aware PartitionSpec rules for params / batches /
+               decode caches on the production meshes
+  hints        ``sharding_rules(mesh)`` context + ``hint(x, *roles)`` — the
+               lazy in-model annotation hook every layer calls
+  compression  int8 error-feedback gradient compression for DP collectives
+"""
+
+from repro.dist import compression, hints, sharding
+
+__all__ = ["compression", "hints", "sharding"]

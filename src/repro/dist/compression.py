@@ -1,0 +1,94 @@
+"""int8 error-feedback gradient compression for data-parallel collectives.
+
+The cross-layer data-movement lever for the DP axes: gradients are quantized
+to int8 (4x fewer bytes on the wire than f32) before the all-reduce, and the
+per-device quantization residual is fed back into the next step's gradient
+(error feedback / EF-SGD, Seide et al. 2014; Karimireddy et al. 2019). EF
+keeps the *accumulated* update unbiased, so SGD converges at the uncompressed
+rate despite the lossy collective.
+
+All functions are shard_map-friendly: :func:`compressed_psum` uses
+``jax.lax.psum`` over a named mesh axis and works unchanged from 1 device to
+a full pod.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# ------------------------------------------------------------- quantization
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q int8, scale f32 scalar).
+
+    Round-to-nearest onto the int8 grid, so the roundtrip error is bounded by
+    scale/2 per element. A zero tensor gets scale 0 and q == 0."""
+    xf = x.astype(jnp.float32)
+    scale = (jnp.max(jnp.abs(xf)) / 127.0).astype(jnp.float32)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / safe), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compression_ratio(tree: Pytree) -> float:
+    """Wire-bytes ratio: original dtype bytes vs int8 payload + f32 scale."""
+    leaves = jax.tree.leaves(tree)
+    orig = sum(leaf.size * leaf.dtype.itemsize for leaf in leaves)
+    comp = sum(leaf.size + 4 for leaf in leaves)     # int8 + per-tensor scale
+    return orig / comp
+
+
+# ------------------------------------------------------- compressed psum/EF
+def compressed_psum(x: jax.Array, axis_name: str, err: jax.Array | None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Mean of ``x`` over ``axis_name`` through an int8-compressed collective,
+    with error feedback. Must run inside shard_map (needs the named axis).
+    The wire traffic really is int8 (an all_gather of the quantized payload
+    plus per-device scales), not a dressed-up f32 psum — the HLO collective
+    accounting in launch/hlo_analysis sees the compressed bytes.
+
+    Returns ``(mean, new_err)`` where ``new_err`` is this device's residual to
+    feed into the next call. Invariant (per device): the compensated value
+    ``dequantized + new_err`` equals ``x + err`` exactly, which is what makes
+    the accumulated means unbiased over steps.
+    """
+    if err is None:
+        err = jnp.zeros(x.shape, jnp.float32)
+    comp = x.astype(jnp.float32) + err          # error-compensated gradient
+    q, scale = quantize_int8(comp)
+    new_err = comp - dequantize_int8(q, scale)
+    # The collective moves int8 + one f32 scale per device; dequantization
+    # and the reduction happen device-locally on the gathered payload (same
+    # summation order everywhere -> bitwise-identical means on all devices).
+    q_all = jax.lax.all_gather(q, axis_name)
+    s_all = jax.lax.all_gather(scale, axis_name)
+    n = q_all.shape[0]
+    deq_all = q_all.astype(jnp.float32) * s_all.reshape((n,) + (1,) * x.ndim)
+    mean = deq_all.sum(axis=0) / n
+    return mean.astype(x.dtype), new_err
+
+
+def wrap_grads(grads: Pytree, axis_name: str, err: Pytree | None
+               ) -> tuple[Pytree, Pytree]:
+    """Per-leaf :func:`compressed_psum` over a gradient pytree.
+
+    ``err`` is the error-feedback state from the previous step (None on step
+    0 -> zeros). Returns ``(mean_grads, new_err)`` with ``new_err`` matching
+    the structure of ``grads``."""
+    struct = jax.tree.structure(grads)
+    g_leaves = jax.tree.leaves(grads)
+    e_leaves = jax.tree.leaves(err) if err is not None else [None] * len(g_leaves)
+    pairs = [compressed_psum(g, axis_name, e)
+             for g, e in zip(g_leaves, e_leaves)]
+    means = jax.tree.unflatten(struct, [p[0] for p in pairs])
+    errs = jax.tree.unflatten(struct, [p[1] for p in pairs])
+    return means, errs

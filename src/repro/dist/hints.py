@@ -1,0 +1,113 @@
+"""Logical-axis sharding hints — the runtime half of the cross-layer contract.
+
+Model code annotates tensors with *roles* ("dp", "tp", "seq", …) instead of
+mesh axes; :func:`sharding_rules` binds roles to a concrete mesh for the
+duration of a trace, and :func:`hint` resolves them into
+``with_sharding_constraint`` calls. Outside a rules context every hint is a
+strict no-op (identity — not even a constraint), so the same model functions
+run unmodified on an unmeshed CPU.
+
+Roles:
+  "dp"                        batch-like dims -> all DP axes (pod, data)
+  "tp"                        head/ff/vocab dims -> "model"
+  "seq" / "sp" / "sq"         sequence dims -> whatever axes are still free
+                              ("model" first — sequence parallelism kicks in
+                              exactly when heads/ff can't use the TP axis)
+  "sp_seq"                    Megatron-SP residual activations; inert unless
+                              ``sharding_rules(mesh, seq_parallel=True)``
+
+Resolution is divisibility-aware per dim and never reuses a mesh axis, so
+hints degrade to replication instead of failing (tested: hint on a (3,7,5)
+tensor under any mesh).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+_SEQ_ROLES = ("seq", "sp", "sq", "sp_seq")
+
+_ACTIVE: dict[str, Any] | None = None
+
+
+def _make_rules(mesh, seq_parallel: bool = False) -> dict[str, Any]:
+    dp = shd.dp_axes(mesh)
+    tp = shd.tp_axis(mesh)
+    sizes = shd.mesh_axes(mesh)
+    return {
+        "mesh": mesh,
+        "dp": dp,
+        "tp": tp,
+        "dp_size": int(np.prod([sizes[a] for a in dp])) if dp else 1,
+        "tp_size": sizes.get("model", 1),
+        "seq_parallel": seq_parallel,
+    }
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh, *, seq_parallel: bool = False):
+    """Bind logical roles to ``mesh`` for the enclosed trace/execution.
+
+    ``seq_parallel`` opts in to Megatron-style sequence parallelism: the
+    "sp_seq" role on residual activations stays inert unless enabled (the
+    structural sequence roles "seq"/"sp"/"sq" are always live)."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = _make_rules(mesh, seq_parallel)
+    try:
+        yield _ACTIVE
+    finally:
+        _ACTIVE = prev
+
+
+def get_rules() -> dict[str, Any] | None:
+    """The active role->axis binding, or None outside a rules context."""
+    return _ACTIVE
+
+
+def tp_divides(dim: int) -> bool:
+    """Can ``dim`` shard over the TP axis? Vacuously true without rules."""
+    r = _ACTIVE
+    if r is None or r["tp"] is None:
+        return True
+    return dim % r["tp_size"] == 0
+
+
+def hint(x: jax.Array, *roles) -> jax.Array:
+    """Constrain ``x``'s sharding by per-dim roles (one role per dim).
+
+    Identity outside a :func:`sharding_rules` context. Under rules, primary
+    roles ("dp", "tp") claim their axes first; sequence roles then sweep up
+    any axes left unused — each axis at most once, each assignment only if it
+    divides the dim.
+    """
+    r = _ACTIVE
+    if r is None:
+        return x
+    assert len(roles) == x.ndim, \
+        f"hint(): {len(roles)} roles for rank-{x.ndim} tensor {x.shape}"
+    mesh = r["mesh"]
+    used: set = set()
+    entries: list = [None] * x.ndim
+    for i, role in enumerate(roles):
+        if role == "dp":
+            entries[i] = shd._fit(mesh, x.shape[i], r["dp"], used)
+        elif role == "tp" and r["tp"] is not None:
+            entries[i] = shd._fit(mesh, x.shape[i], (r["tp"],), used)
+    for i, role in enumerate(roles):
+        if role == "sp_seq" and not r["seq_parallel"]:
+            continue                       # Megatron-SP residuals are opt-in
+        if role in _SEQ_ROLES:
+            rest = ((r["tp"],) if r["tp"] else ()) + r["dp"]
+            entries[i] = shd._fit(mesh, x.shape[i], rest, used)
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

@@ -116,6 +116,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             compiled = lowered.compile()
 
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):   # jax<=0.4 returns [dict]
+                ca = ca[0] if ca else {}
             ma = compiled.memory_analysis()
             rec["flops_per_device"] = float(ca.get("flops", 0.0))
             rec["bytes_per_device"] = float(ca.get("bytes accessed", 0.0))

@@ -8,3 +8,6 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+import repro  # noqa: E402,F401 — installs the jax API compat shims
+

@@ -2,7 +2,11 @@
 with networkx as the independent oracle."""
 
 import networkx as nx
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import compile_workflow, HPC_CLUSTER
 from repro.core.dag import TaskGraph
