@@ -34,8 +34,9 @@ def _strip_hints(g):
     return g2
 
 
-def run(report) -> None:
-    g = random_layered_workflow(8, 16, seed=11)
+def run(report, quick: bool = False) -> None:
+    g = (random_layered_workflow(4, 8, seed=11) if quick
+         else random_layered_workflow(8, 16, seed=11))
     wf_true = compile_workflow(g, HPC_CLUSTER)
     wf_blind = compile_workflow(_strip_hints(g), HPC_CLUSTER)
     # the blind plan must still run against TRUE sizes/costs:

@@ -8,8 +8,8 @@ import time
 from repro.core.locstore import LocStore, LocationService, Placement, SimObject
 
 
-def run(report) -> None:
-    n = 20_000
+def run(report, quick: bool = False) -> None:
+    n = 2_000 if quick else 20_000
     # put with explicit placement (S_LOC path)
     st = LocStore(1024, n_meta_shards=32)
     t0 = time.perf_counter()
@@ -43,7 +43,7 @@ def run(report) -> None:
 
     # metadata shard balance at scale
     svc = LocationService(64)
-    for i in range(100_000):
+    for i in range(10_000 if quick else 100_000):
         svc.record(f"obj{i}", Placement((i % 512,)))
     bal = svc.load_balance()
     skew = bal["max_shard"] / (bal["entries"] / bal["shards"])

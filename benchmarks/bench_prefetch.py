@@ -22,10 +22,11 @@ from repro.core.workloads import random_layered_workflow
 from repro.data.pipeline import PrefetchingLoader
 
 
-def run(report) -> None:
+def run(report, quick: bool = False) -> None:
     # (a) simulated I/O wait vs compute intensity
-    for fpb in (200.0, 2000.0, 20000.0):
-        g = random_layered_workflow(8, 16, seed=3, flops_per_byte=fpb)
+    shape = (4, 8) if quick else (8, 16)
+    for fpb in ((2000.0,) if quick else (200.0, 2000.0, 20000.0)):
+        g = random_layered_workflow(*shape, seed=3, flops_per_byte=fpb)
         wf = compile_workflow(g, HPC_CLUSTER)
         loc = simulate(wf, LocalityScheduler, n_nodes=16, hw=HPC_CLUSTER)
         pro = simulate(wf, ProactiveScheduler, n_nodes=16, hw=HPC_CLUSTER)
@@ -36,7 +37,9 @@ def run(report) -> None:
                f"prefetched={pro.bytes_prefetched/2**30:.1f}GiB")
 
     # (b) real loader A/B with injected producer latency
-    def producer(delay, n=12):
+    n_batches = 6 if quick else 12
+
+    def producer(delay, n=n_batches):
         for i in range(n):
             time.sleep(delay)
             yield {"x": np.zeros((64, 64), np.float32)}
@@ -55,7 +58,8 @@ def run(report) -> None:
     consume(loader)
     overlapped = time.perf_counter() - t0
 
-    report("prefetch/real/serial", serial * 1e6 / 12, f"wall={serial:.2f}s")
-    report("prefetch/real/overlapped", overlapped * 1e6 / 12,
+    report("prefetch/real/serial", serial * 1e6 / n_batches,
+           f"wall={serial:.2f}s")
+    report("prefetch/real/overlapped", overlapped * 1e6 / n_batches,
            f"wall={overlapped:.2f}s speedup={serial/overlapped:.2f}x "
            f"waits={loader.waits}")

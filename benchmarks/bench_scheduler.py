@@ -26,8 +26,14 @@ WORKFLOWS = [
 ]
 
 
-def run(report) -> None:
-    for wname, builder in WORKFLOWS:
+QUICK_WORKFLOWS = [
+    ("fig2", lambda: fig2_workflow(flops_per_byte=20_000)),
+    ("mapreduce16", lambda: mapreduce_workflow(16, 4)),
+]
+
+
+def run(report, quick: bool = False) -> None:
+    for wname, builder in (QUICK_WORKFLOWS if quick else WORKFLOWS):
         wf = compile_workflow(builder(), HPC_CLUSTER)
         base = None
         for sname, factory in SCHEDULERS:
@@ -42,7 +48,7 @@ def run(report) -> None:
                    f"vs_fcfs_moved={r.bytes_moved/max(base.bytes_moved,1):.2f}x")
 
     # scale sweep: decision cost per task at 256..4096 nodes
-    for nodes in (256, 1024, 4096):
+    for nodes in ((256,) if quick else (256, 1024, 4096)):
         wf = compile_workflow(mapreduce_workflow(min(nodes, 512), 32),
                               HPC_CLUSTER)
         t0 = time.perf_counter()

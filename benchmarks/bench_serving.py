@@ -16,10 +16,10 @@ from repro.models import init_params
 from repro.serve.engine import Router, ServingEngine
 
 
-def run(report) -> None:
+def run(report, quick: bool = False) -> None:
     cfg = dataclasses.replace(get_smoke("granite-3-2b"), dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    n_engines, n_sessions, n_turns = 2, 4, 3
+    n_engines, n_sessions, n_turns = (2, 2, 2) if quick else (2, 4, 3)
 
     def turns(router_on: bool):
         rng = np.random.default_rng(42)

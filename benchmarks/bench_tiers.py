@@ -1,0 +1,86 @@
+"""E7 — the storage hierarchy earns its keep under capacity pressure.
+
+Two measurements:
+
+  (a) **simulator capacity sweep** (the headline): the montage workflow —
+      whose projected tiles are re-read late by the correction stage — on a
+      4-node cluster whose per-node memory is swept from "badly undersized"
+      to "comfortable". The *flat* baseline is the paper's original two-tier
+      model with a capacity: when host memory fills, the only demotion target
+      is the remote PFS, so every late re-read is a PFS fetch. The *tiered*
+      store demotes hbm -> host -> burst buffer instead, keeping spilled data
+      node-local. Headline numbers: remote-PFS bytes and total I/O wait.
+
+  (b) **store-level trace**: a deterministic cyclic access pattern over a
+      working set 2x the host tier, measuring demotion/promotion throughput
+      and the remote-byte ratio of tiered vs flat — the microbenchmark view
+      of the same effect.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (HPC_CLUSTER, LocalityScheduler, StorageHierarchy,
+                        TierSpec, compile_workflow, simulate)
+from repro.core.locstore import LocStore, SimObject
+from repro.core.workloads import montage_workflow
+
+GB = float(1 << 30)
+REMOTE_GBPS = 0.5e9          # the paper's ~1 GB/s Lustre, shared
+
+
+def _flat(cap: float) -> StorageHierarchy:
+    """The two-tier baseline WITH a node capacity: host memory over PFS."""
+    return StorageHierarchy([TierSpec("host", cap, 100e9)],
+                            remote=TierSpec("remote", float("inf"),
+                                            REMOTE_GBPS))
+
+
+def _tiered(cap: float) -> StorageHierarchy:
+    """Same host capacity, plus device HBM above and a burst buffer below."""
+    return StorageHierarchy(
+        [TierSpec("hbm", cap / 4, 819e9),
+         TierSpec("host", cap, 100e9),
+         TierSpec("bb", 16 * cap, 8e9)],
+        remote=TierSpec("remote", float("inf"), REMOTE_GBPS))
+
+
+def run(report, quick: bool = False) -> None:
+    # (a) capacity sweep, tiered vs flat
+    width = 16 if quick else 32
+    caps = (0.5, 2.0) if quick else (0.25, 0.5, 1.0, 2.0, 8.0)
+    wf = compile_workflow(montage_workflow(width), HPC_CLUSTER)
+    for cap_gb in caps:
+        cap = cap_gb * GB
+        rf = simulate(wf, LocalityScheduler, n_nodes=4, hw=HPC_CLUSTER,
+                      hierarchy=_flat(cap))
+        rt = simulate(wf, LocalityScheduler, n_nodes=4, hw=HPC_CLUSTER,
+                      hierarchy=_tiered(cap))
+        saved = 1.0 - rt.remote_bytes / max(rf.remote_bytes, 1e-9)
+        report(f"tiers/sweep/cap{cap_gb}g", 0.0,
+               f"remote {rf.remote_bytes/GB:.1f}->{rt.remote_bytes/GB:.1f}GiB "
+               f"(-{saved:.0%}) io_wait {rf.io_wait_total:.0f}->"
+               f"{rt.io_wait_total:.0f}s makespan {rf.makespan:.0f}->"
+               f"{rt.makespan:.0f}s demotions={rt.demotions}")
+
+    # (b) store-level cyclic trace: working set 2x the host tier
+    n = 64 if quick else 256
+    obj = 64 * (1 << 20)                       # 64 MiB objects
+    cap = n * obj / 2.0
+    for label, hier in (("flat", _flat(cap)), ("tiered", _tiered(cap))):
+        st = LocStore(1, hierarchy=hier)
+        t0 = time.perf_counter()
+        for i in range(n):
+            st.put(f"o{i}", SimObject(float(obj)), loc=0)
+        for _ in range(2):                     # two reuse rounds
+            for i in range(n):
+                st.get(f"o{i}", at=0)
+        dt = time.perf_counter() - t0
+        rep = st.movement_report()
+        ops = n * 3
+        report(f"tiers/trace/{label}", dt * 1e6 / ops,
+               f"remote={rep['remote_bytes']/GB:.1f}GiB "
+               f"demotions={int(rep['demotions'])} "
+               f"promotions={int(rep['promotions'])} "
+               f"hit={rep['locality_hit_rate']:.0%}")

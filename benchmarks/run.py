@@ -9,26 +9,43 @@ results/benchmarks.json).
   E4 bench_locstore  — location service / store microbenchmarks
   E5 bench_serving   — location-aware routing saves prefills
   E6 bench_roofline  — roofline terms per (arch × shape × mesh) dry-run cell
+  E7 bench_tiers     — storage hierarchy vs flat store under capacity pressure
+
+``--quick`` runs every module at smoke scale (small shapes, few reps) — the
+CI benchmark job uses it to keep the perf trajectory alive on every push.
+Exits non-zero if any module reported an ``/ERROR`` row, so a crashed
+benchmark cannot green-light CI.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import sys
 
+# self-sufficient invocation: `python benchmarks/run.py` from the repo root
+# (or anywhere) finds both the benchmarks package and src/repro
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
-def main() -> None:
+
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark module name")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke scale: small shapes / few reps (CI)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_ablation, bench_locstore, bench_prefetch,
-                            bench_roofline, bench_scheduler, bench_serving)
+                            bench_roofline, bench_scheduler, bench_serving,
+                            bench_tiers)
     modules = [bench_scheduler, bench_prefetch, bench_ablation,
-               bench_locstore, bench_serving, bench_roofline]
+               bench_locstore, bench_serving, bench_roofline, bench_tiers]
 
     rows: list[dict] = []
 
@@ -42,7 +59,10 @@ def main() -> None:
         if args.only and args.only not in mod.__name__:
             continue
         try:
-            mod.run(report)
+            if "quick" in inspect.signature(mod.run).parameters:
+                mod.run(report, quick=args.quick)
+            else:
+                mod.run(report)
         except Exception as e:  # noqa: BLE001 - a bench failure is a result
             report(f"{mod.__name__}/ERROR", 0.0, f"{type(e).__name__}: {e}")
             import traceback
@@ -52,6 +72,13 @@ def main() -> None:
     with open("results/benchmarks.json", "w") as f:
         json.dump(rows, f, indent=1)
 
+    failed = [r["name"] for r in rows if r["name"].endswith("/ERROR")]
+    if failed:
+        print(f"FAILED: {len(failed)} benchmark module(s) errored: "
+              f"{', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -10,8 +10,10 @@ Layers (paper §B):
 from repro.core.dag import DataSpec, TaskGraph, TaskSpec
 from repro.core.executor import WorkflowExecutor
 from repro.core.hints import Complexity, TaskHints, size_hint, task
-from repro.core.locstore import (LocationService, LocStore, Placement,
-                                 REMOTE_TIER, SimObject, Transfer)
+from repro.core.locstore import (FLAT_HIERARCHY, LocationService, LocStore,
+                                 Placement, REMOTE_TIER, SimObject,
+                                 StorageHierarchy, TierHop, TierSpec, Transfer,
+                                 tiered_hierarchy)
 from repro.core.prefetch import PrefetchEngine
 from repro.core.scheduler import (Assignment, FCFSScheduler, LocalityScheduler,
                                   PrefetchRequest, ProactiveScheduler)
@@ -23,7 +25,8 @@ __all__ = [
     "DataSpec", "TaskGraph", "TaskSpec",
     "Complexity", "TaskHints", "size_hint", "task",
     "LocationService", "LocStore", "Placement", "REMOTE_TIER", "SimObject",
-    "Transfer",
+    "Transfer", "TierHop", "TierSpec", "StorageHierarchy", "FLAT_HIERARCHY",
+    "tiered_hierarchy",
     "CompiledWorkflow", "HardwareModel", "HPC_CLUSTER", "TPU_V5E",
     "compile_workflow",
     "Assignment", "FCFSScheduler", "LocalityScheduler", "PrefetchRequest",

@@ -27,7 +27,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Mapping, Sequence
 
 from repro.core.dag import TaskGraph
-from repro.core.locstore import LocStore, Placement
+from repro.core.locstore import LocStore, Placement, StorageHierarchy
 from repro.core.prefetch import PrefetchEngine
 from repro.core.scheduler import (Assignment, ClusterView, ProactiveScheduler,
                                   SchedulerBase)
@@ -45,6 +45,10 @@ class ExecResult:
     bytes_prefetched: float
     outputs: dict[str, Any]
     task_records: dict[str, dict]
+    remote_bytes: float = 0.0
+    bytes_demoted: float = 0.0
+    demotions: int = 0
+    promotions: int = 0
 
     @property
     def locality_hit_rate(self) -> float:
@@ -66,6 +70,12 @@ class _ExecCluster(ClusterView):
     def link_gbps(self, src: int, dst: int) -> float:
         return self.ex.hw.link_gbps(src, dst)
 
+    def tier_gbps(self, tier: str) -> float:
+        return self.ex.store.hierarchy.bw(tier)
+
+    def top_tier(self) -> str:
+        return self.ex.store.hierarchy.top
+
     def worker_speed(self, node: int) -> float:
         return 1.0
 
@@ -79,14 +89,18 @@ class WorkflowExecutor:
         n_nodes: int = 4,
         hw: HardwareModel = TPU_V5E,
         store: LocStore | None = None,
+        hierarchy: StorageHierarchy | None = None,
         device_of: Callable[[int], Any] | None = None,
         inject_inputs: Mapping[str, Any] | None = None,
     ) -> None:
+        if store is not None and hierarchy is not None:
+            raise ValueError("pass either store= or hierarchy=, not both — "
+                             "an explicit store already owns its hierarchy")
         self.wf = wf
         self.sched = scheduler
         self.hw = hw
         self.n_nodes = n_nodes
-        self.store = store or LocStore(n_nodes)
+        self.store = store or LocStore(n_nodes, hierarchy=hierarchy)
         self.prefetch = PrefetchEngine(self.store, device_of=device_of)
         self.cluster = _ExecCluster(self)
         self._free: set[int] = set(range(n_nodes))
@@ -174,7 +188,8 @@ class WorkflowExecutor:
                                      for n in g.tasks[tid].inputs)]
                         for req in self.sched.preplace(cands, self.cluster,
                                                        dict(self._running_at)):
-                            self.prefetch.submit(req.data_name, req.dst)
+                            self.prefetch.submit(req.data_name, req.dst,
+                                                 tier=req.tier)
                     if assignments:
                         continue
                 self._cv.wait(timeout=0.5)
@@ -196,4 +211,8 @@ class WorkflowExecutor:
             bytes_prefetched=self.prefetch.bytes_prefetched,
             outputs=sink_outputs,
             task_records=self._records,
+            remote_bytes=rep["remote_bytes"],
+            bytes_demoted=rep["bytes_demoted"],
+            demotions=int(rep["demotions"]),
+            promotions=int(rep["promotions"]),
         )

@@ -16,10 +16,22 @@ system extensions the paper proposes for Hercules:
    may re-pin ("real-loc") any object at any time via ``migrate`` — this is the
    channel the scheduler uses for its feedback (paper challenge #3).
 
+Beyond the flat "compute node vs Lustre" split, each node exposes an ordered
+**storage hierarchy** (:class:`StorageHierarchy`): device HBM over host DRAM
+over burst buffer, with the shared parallel-FS ``remote`` tier at the bottom.
+Every node-local tier has a per-node capacity and a sustained bandwidth; when
+a tier fills, the store *demotes* the eviction victim one tier down (never
+dropping data — the bottom of the cascade is the infinite remote tier), and
+``get(name, at=node)`` *promotes* what it touches back to the top tier. The
+default hierarchy is :data:`FLAT_HIERARCHY` (one infinite host tier), which
+reproduces the paper's original two-tier behaviour exactly; pass
+``tiered_hierarchy()`` to turn capacity pressure on.
+
 Values can be anything sized: JAX arrays (``.nbytes``), numpy arrays, bytes, or
 :class:`SimObject` stand-ins for the simulator. ``get(name, at=node)`` returns
-the value AND a :class:`Transfer` record of the bytes that had to move — the
-accounting every benchmark in this repo is built on.
+the value AND a :class:`Transfer` record of the bytes that had to move — with
+per-tier-hop accounting (:class:`TierHop`) — the numbers every benchmark in
+this repo is built on.
 """
 
 from __future__ import annotations
@@ -28,17 +40,123 @@ import dataclasses
 import hashlib
 import threading
 import time
-from typing import Any, Iterable, Mapping
+from typing import Any, Iterable, Mapping, Sequence
 
-__all__ = ["Placement", "SimObject", "Transfer", "LocationService", "LocStore",
-           "REMOTE_TIER"]
+__all__ = ["Placement", "SimObject", "Transfer", "TierHop", "TierSpec",
+           "StorageHierarchy", "FLAT_HIERARCHY", "tiered_hierarchy",
+           "LocationService", "LocStore", "REMOTE_TIER"]
 
 REMOTE_TIER = -1  # node id of the remote parallel-FS tier (Lustre analogue)
+
+GiB = float(1 << 30)
 
 
 def _stable_hash(name: str) -> int:
     return int.from_bytes(hashlib.blake2b(name.encode(), digest_size=8).digest(),
                           "big")
+
+
+# --------------------------------------------------------------------- tiers
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One level of the per-node storage hierarchy.
+
+    ``capacity_bytes`` is PER NODE (``inf`` = unbounded); ``gbps`` is the
+    sustained read/write bandwidth of the medium in bytes/s (``inf`` = free,
+    which is how the flat hierarchy keeps the original two-tier cost model).
+    """
+
+    name: str
+    capacity_bytes: float = float("inf")
+    gbps: float = float("inf")
+
+
+class StorageHierarchy:
+    """Ordered node-local tiers (fastest first) + the shared remote PFS tier.
+
+    The hierarchy answers three questions for the store: where does a fresh
+    object land (``top``), where does an eviction victim go (``next_down`` —
+    ``None`` past the last node tier, meaning "spill to remote"), and how fast
+    is a tier's medium (``bw``).
+    """
+
+    def __init__(self, tiers: Sequence[TierSpec],
+                 remote: TierSpec | None = None) -> None:
+        if not tiers:
+            raise ValueError("need at least one node-local tier")
+        self.tiers = tuple(tiers)
+        self.remote = remote or TierSpec("remote")
+        names = [t.name for t in self.tiers] + [self.remote.name]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names: {names}")
+        self._spec = {t.name: t for t in self.tiers}
+        self._spec[self.remote.name] = self.remote
+        self._order = {t.name: i for i, t in enumerate(self.tiers)}
+        self._rank = dict(self._order)
+        self._rank[self.remote.name] = len(self.tiers)
+
+    @property
+    def top(self) -> str:
+        return self.tiers[0].name
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(t.name for t in self.tiers) + (self.remote.name,)
+
+    def is_node_tier(self, tier: str) -> bool:
+        return tier in self._order
+
+    def normalize(self, tier: str | None) -> str:
+        """Map legacy/foreign tier names onto this hierarchy's node tiers."""
+        if tier is None or tier == "node" or tier == self.remote.name:
+            return self.top
+        if tier in self._order:
+            return tier
+        # e.g. a scheduler asking for "hbm" against the flat hierarchy
+        return self.top
+
+    def spec(self, tier: str) -> TierSpec:
+        return self._spec[tier]
+
+    def capacity(self, tier: str) -> float:
+        return self._spec[tier].capacity_bytes
+
+    def bw(self, tier: str) -> float:
+        spec = self._spec.get(tier)
+        return spec.gbps if spec is not None else float("inf")
+
+    def rank(self, tier: str) -> int:
+        """Position in the hierarchy (0 = fastest; unknown sorts below all)."""
+        return self._rank.get(tier, len(self._rank))
+
+    def next_down(self, tier: str) -> str | None:
+        """The demotion target below ``tier`` (None = spill to remote)."""
+        i = self._order[tier]
+        if i + 1 < len(self.tiers):
+            return self.tiers[i + 1].name
+        return None
+
+    def media_seconds(self, nbytes: float, tier: str) -> float:
+        bw = self.bw(tier)
+        return 0.0 if bw == float("inf") else nbytes / bw
+
+
+#: The original two-tier model: one unbounded, free host tier per node plus
+#: the remote PFS. All existing cost accounting reduces to link bandwidths.
+FLAT_HIERARCHY = StorageHierarchy([TierSpec("host")])
+
+
+def tiered_hierarchy(*, hbm_bytes: float = 16 * GiB,
+                     host_bytes: float = 64 * GiB,
+                     bb_bytes: float = 256 * GiB,
+                     hbm_gbps: float = 819e9, host_gbps: float = 100e9,
+                     bb_gbps: float = 8e9, remote_gbps: float = 2e9,
+                     ) -> StorageHierarchy:
+    """Device-HBM / host-DRAM / burst-buffer / PFS — the HPC storage gradient."""
+    return StorageHierarchy(
+        [TierSpec("hbm", hbm_bytes, hbm_gbps),
+         TierSpec("host", host_bytes, host_gbps),
+         TierSpec("bb", bb_bytes, bb_gbps)],
+        remote=TierSpec("remote", float("inf"), remote_gbps))
 
 
 @dataclasses.dataclass
@@ -47,12 +165,15 @@ class Placement:
 
     ``nodes`` is a tuple because the store supports replication; the paper's
     ``real-loc`` is ``nodes[0]``. ``xattr`` is the extended-attribute dict the
-    paper stores location metadata in.
+    paper stores location metadata in. ``tiers``, when set by a tiered store,
+    is aligned with ``nodes`` and names the storage tier of each replica;
+    ``tier`` alone describes the primary replica (kept for the two-tier API).
     """
 
     nodes: tuple[int, ...]
-    tier: str = "node"                      # "node" | "remote"
+    tier: str = "host"                      # tier of nodes[0]
     xattr: dict[str, Any] = dataclasses.field(default_factory=dict)
+    tiers: tuple[str, ...] | None = None    # per-replica tiers (tiered store)
 
     @property
     def real_loc(self) -> int:
@@ -60,6 +181,16 @@ class Placement:
 
     def resident_on(self, node: int) -> bool:
         return node in self.nodes
+
+    def tier_on(self, node: int) -> str:
+        """Tier of the replica on ``node`` (falls back to ``tier``/remote)."""
+        if self.tiers is not None:
+            for n, t in zip(self.nodes, self.tiers):
+                if n == node:
+                    return t
+        if node == REMOTE_TIER:
+            return "remote"
+        return self.tier
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,17 +201,43 @@ class SimObject:
 
 
 @dataclasses.dataclass(frozen=True)
+class TierHop:
+    """One hop of a movement through the storage hierarchy."""
+
+    src_node: int
+    src_tier: str
+    dst_node: int
+    dst_tier: str
+    nbytes: float
+    est_seconds: float
+
+
+@dataclasses.dataclass(frozen=True)
 class Transfer:
-    """One data movement the store had to perform to satisfy a ``get``."""
+    """One data movement the store performed (fetch, demotion, promotion).
+
+    ``hops`` itemizes the path through the hierarchy; ``est_seconds`` is the
+    storage-layer media time (tier read + write) — the network link time on
+    top of it is the hardware model's business (simulator/compiler add it).
+    """
 
     name: str
     nbytes: float
     src: int
     dst: int
+    src_tier: str = "host"
+    dst_tier: str = "host"
+    est_seconds: float = 0.0
+    kind: str = "fetch"                 # fetch | demote | promote
+    hops: tuple[TierHop, ...] = ()
 
     @property
     def local(self) -> bool:
         return self.src == self.dst
+
+    @property
+    def remote(self) -> bool:
+        return self.src == REMOTE_TIER or self.dst == REMOTE_TIER
 
 
 def sizeof(value: Any) -> float:
@@ -150,23 +307,48 @@ class LocStore:
 
     ``nodes`` are integer ids 0..N-1 (plus :data:`REMOTE_TIER`). Thread-safe:
     the executor's worker threads and the prefetch engine hit it concurrently.
+
+    With a capacity-bounded ``hierarchy``, each replica lives in one tier of
+    its node; admitting past a tier's capacity demotes the eviction victim
+    (``eviction_policy``: "lru", or "cost" = largest-coldest-first) down-tier,
+    spilling to the remote PFS only below the last node tier. Reads promote
+    the touched object back to the top tier (``promote_on_access``).
     """
 
     def __init__(self, n_nodes: int, *, n_meta_shards: int = 16,
-                 default_policy: str = "hash") -> None:
+                 default_policy: str = "hash",
+                 hierarchy: StorageHierarchy | None = None,
+                 eviction_policy: str = "lru",
+                 promote_on_access: bool = True) -> None:
         if n_nodes < 1:
             raise ValueError("need at least one node")
+        if eviction_policy not in ("lru", "cost"):
+            raise ValueError(f"unknown eviction policy {eviction_policy!r}")
         self.n_nodes = n_nodes
         self.loc = LocationService(n_meta_shards)
         self.default_policy = default_policy
+        self.hierarchy = hierarchy or FLAT_HIERARCHY
+        self.eviction_policy = eviction_policy
+        self.promote_on_access = promote_on_access
         self._values: dict[str, Any] = {}
+        self._sizes: dict[str, float] = {}
+        # replica map: name -> {node: tier} (insertion order = primary first)
+        self._residency: dict[str, dict[int, str]] = {}
+        self._usage: dict[tuple[int, str], float] = {}
+        self._last_access: dict[tuple[int, str], dict[str, int]] = {}
+        self._clock = 0
         self._lock = threading.RLock()
         self._rr = 0
         # accounting
         self.transfers: list[Transfer] = []
         self.bytes_moved = 0.0
         self.bytes_local = 0.0
+        self.remote_bytes = 0.0        # network bytes touching the PFS tier
+        self.bytes_demoted = 0.0
+        self.demotions = 0
+        self.promotions = 0
         self.migrations = 0
+        self.tier_reads: dict[str, float] = {}
 
     # ------------------------------------------------------------ placement
     def _default_placement(self, name: str) -> Placement:
@@ -178,21 +360,139 @@ class LocStore:
                 self._rr += 1
         else:
             raise ValueError(f"unknown default policy {self.default_policy!r}")
-        return Placement(nodes=(node,))
+        return Placement(nodes=(node,), tier=self.hierarchy.top)
 
     def _norm_loc(self, loc: Any) -> Placement:
         if isinstance(loc, Placement):
             return loc
         if isinstance(loc, int):
-            return Placement(nodes=(loc,))
+            return Placement(nodes=(loc,), tier=self.hierarchy.top)
         if isinstance(loc, (tuple, list)):
-            return Placement(nodes=tuple(int(n) for n in loc))
+            return Placement(nodes=tuple(int(n) for n in loc),
+                             tier=self.hierarchy.top)
         raise TypeError(f"cannot interpret location {loc!r}")
+
+    # ------------------------------------------------- tier admission (LRU)
+    def _touch(self, name: str, node: int, tier: str) -> None:
+        self._clock += 1
+        self._last_access.setdefault((node, tier), {})[name] = self._clock
+
+    def _victim(self, node: int, tier: str, protect: str) -> str | None:
+        recency = self._last_access.get((node, tier), {})
+        candidates = [n for n in recency if n != protect]
+        if not candidates:
+            return None
+        if self.eviction_policy == "cost":
+            # cost-aware: large, stale objects go first — freeing the most
+            # capacity for the least loss of hot data (GreedyDual-Size-ish;
+            # with equal sizes it degrades to plain LRU).
+            return max(candidates,
+                       key=lambda n: self._sizes.get(n, 0.0)
+                       * (self._clock - recency[n] + 1))
+        return min(candidates, key=lambda n: recency[n])
+
+    def _drop_replica(self, name: str, node: int, tier: str) -> None:
+        res = self._residency.get(name)
+        if res is None or res.get(node) != tier:
+            return
+        del res[node]
+        key = (node, tier)
+        self._usage[key] = max(self._usage.get(key, 0.0)
+                               - self._sizes.get(name, 0.0), 0.0)
+        self._last_access.get(key, {}).pop(name, None)
+
+    def _admit(self, name: str, node: int, tier: str,
+               hops: list[TierHop] | None = None, *,
+               spill: bool = False) -> str:
+        """Place ``name``'s replica at (node, tier), demoting victims to fit.
+
+        Returns the tier the object actually landed in (an object larger than
+        every node tier cascades straight down to the remote PFS). Caller
+        holds the lock. Demotion hops are appended to ``hops`` and recorded as
+        ``kind="demote"`` transfers. ``spill=True`` means landing on the
+        remote tier is capacity-forced data movement (counted in
+        ``bytes_moved``/``remote_bytes``), not a caller-pinned PFS placement.
+        """
+        nbytes = self._sizes.get(name, 0.0)
+        if node == REMOTE_TIER or not self.hierarchy.is_node_tier(tier):
+            res = self._residency.setdefault(name, {})
+            if spill and REMOTE_TIER not in res:
+                self.bytes_moved += nbytes
+                self.remote_bytes += nbytes
+            res[REMOTE_TIER] = "remote"
+            return "remote"
+        cap = self.hierarchy.capacity(tier)
+        if nbytes > cap:                       # cannot ever fit: skip down
+            down = self.hierarchy.next_down(tier)
+            return self._admit(name, node,
+                               down if down is not None else "remote", hops,
+                               spill=spill)
+        res = self._residency.setdefault(name, {})
+        old = res.get(node)
+        if old == tier:
+            self._touch(name, node, tier)
+            return tier
+        if old is not None:                    # moving between tiers on-node
+            self._drop_replica(name, node, old)
+        key = (node, tier)
+        self._usage[key] = self._usage.get(key, 0.0) + nbytes
+        res[node] = tier
+        self._touch(name, node, tier)
+        # cascade-demote until this tier fits again
+        while self._usage.get(key, 0.0) > cap:
+            victim = self._victim(node, tier, protect=name)
+            if victim is None:
+                break
+            self._demote(victim, node, tier, hops)
+            self._sync_placement(victim)
+        return tier
+
+    def _demote(self, name: str, node: int, tier: str,
+                hops: list[TierHop] | None = None) -> None:
+        """Move one replica a tier down (to the remote PFS past the bottom)."""
+        nbytes = self._sizes.get(name, 0.0)
+        down = self.hierarchy.next_down(tier)
+        self._drop_replica(name, node, tier)
+        landed = self._admit(name, node,
+                             down if down is not None else "remote", hops,
+                             spill=True)
+        if landed == "remote":
+            dst_node, dst_tier = REMOTE_TIER, "remote"
+        else:
+            dst_node, dst_tier = node, landed
+        est = (self.hierarchy.media_seconds(nbytes, tier)
+               + self.hierarchy.media_seconds(nbytes, dst_tier))
+        hop = TierHop(node, tier, dst_node, dst_tier, nbytes, est)
+        if hops is not None:
+            hops.append(hop)
+        self.bytes_demoted += nbytes
+        self.demotions += 1
+        self.transfers.append(Transfer(
+            name, nbytes, node, dst_node, src_tier=tier, dst_tier=dst_tier,
+            est_seconds=est, kind="demote", hops=(hop,)))
+
+    def _sync_placement(self, name: str) -> None:
+        """Re-record the LocationService entry from the residency map."""
+        res = self._residency.get(name)
+        if not res:
+            return
+        prev = self.loc.lookup(name)
+        nodes = tuple(res.keys())
+        tiers = tuple(res.values())
+        self.loc.record(name, Placement(
+            nodes=nodes, tier=tiers[0], tiers=tiers,
+            xattr=prev.xattr if prev is not None else {}))
 
     # ------------------------------------------------------------------ api
     def put(self, name: str, value: Any, *, loc: Any | None = None,
+            tier: str | None = None,
             xattr: Mapping[str, Any] | None = None) -> Placement:
-        """Create an object; ``loc`` is the paper's ``S_LOC`` pinned placement."""
+        """Create an object; ``loc`` is the paper's ``S_LOC`` pinned placement.
+
+        ``tier`` pins the starting tier on every node of the placement
+        (default: the hierarchy's top tier — fresh output lands in the fastest
+        memory and capacity pressure demotes it from there).
+        """
         placement = (self._norm_loc(loc) if loc is not None
                      else self._default_placement(name))
         for n in placement.nodes:
@@ -201,10 +501,26 @@ class LocStore:
         placement.xattr.update(xattr or {})
         placement.xattr.setdefault("ctime", time.time())
         placement.xattr.setdefault("size", sizeof(value))
+        want = self.hierarchy.normalize(tier if tier is not None
+                                        else placement.tier)
         with self._lock:
+            if name in self._residency:      # overwrite: clear old replicas
+                for n, t in list(self._residency[name].items()):
+                    self._drop_replica(name, n, t)
+                self._residency.pop(name, None)
             self._values[name] = value
-        self.loc.record(name, placement)
-        return placement
+            self._sizes[name] = sizeof(value)
+            for n in placement.nodes:
+                # an explicit PFS placement is where the data starts, not a
+                # movement; a node placement that cascades to the PFS is
+                self._admit(name, n, "remote" if n == REMOTE_TIER else want,
+                            spill=n != REMOTE_TIER)
+            nodes = tuple(self._residency[name].keys())
+            tiers = tuple(self._residency[name].values())
+        final = Placement(nodes=nodes, tier=tiers[0], tiers=tiers,
+                          xattr=placement.xattr)
+        self.loc.record(name, final)
+        return final
 
     def exists(self, name: str) -> bool:
         return self.loc.lookup(name) is not None
@@ -222,34 +538,94 @@ class LocStore:
             return p.real_loc
         if key == "nodes":
             return p.nodes
+        if key == "tier":
+            return p.tier
         return p.xattr[key]
 
     def get(self, name: str, *, at: int | None = None) -> tuple[Any, Transfer | None]:
         """Read an object from node ``at``; returns (value, movement record).
 
-        If the object is resident on ``at`` the movement record is a
-        zero-copy local hit (``Transfer.local``); otherwise the nearest replica
-        is the source and the store notes a network transfer. ``at=None`` skips
-        accounting (metadata read).
+        If the object is resident on ``at`` the movement record is a local hit
+        (``Transfer.local``) whose ``est_seconds`` is the resident tier's media
+        time, and the replica is promoted back to the top tier; otherwise the
+        nearest (highest-tier, then closest) replica is the source and the
+        store notes a network transfer. ``at=None`` skips accounting
+        (metadata read).
         """
-        p = self.stat(name)
+        self.stat(name)                       # raises KeyError if unknown
         with self._lock:
             value = self._values[name]
-        if at is None:
-            return value, None
-        nbytes = sizeof(value)
-        if p.resident_on(at):
-            t = Transfer(name, nbytes, at, at)
-            with self._lock:
+            if at is None:
+                return value, None
+            nbytes = self._sizes.get(name, sizeof(value))
+            res = self._residency.get(name, {})
+            if at in res:
+                src_tier = res[at]
+                hops: list[TierHop] = [TierHop(at, src_tier, at, src_tier,
+                                               nbytes,
+                                               self.hierarchy.media_seconds(
+                                                   nbytes, src_tier))]
+                self._touch(name, at, src_tier)
+                dst_tier = src_tier
+                if (self.promote_on_access
+                        and self.hierarchy.is_node_tier(src_tier)
+                        and src_tier != self.hierarchy.top):
+                    # victim demotions this admit causes are recorded as
+                    # their own kind="demote" transfers, not in our hops
+                    landed = self._admit(name, at, self.hierarchy.top)
+                    if landed != src_tier:
+                        self.promotions += 1
+                        hops.append(TierHop(
+                            at, src_tier, at, landed, nbytes,
+                            self.hierarchy.media_seconds(nbytes, landed)))
+                        dst_tier = landed
+                    self._sync_placement(name)
+                t = Transfer(name, nbytes, at, at, src_tier=src_tier,
+                             dst_tier=dst_tier,
+                             est_seconds=hops[0].est_seconds,
+                             kind="fetch", hops=tuple(hops))
                 self.bytes_local += nbytes
+                self.tier_reads[src_tier] = (self.tier_reads.get(src_tier, 0.0)
+                                             + nbytes)
                 self.transfers.append(t)
-            return value, t
-        src = min(p.nodes, key=lambda n: (n == REMOTE_TIER, abs(n - at)))
-        t = Transfer(name, nbytes, src, at)
-        with self._lock:
+                return value, t
+            # remote replica: prefer non-PFS, then the fastest tier, then near
+            src = min(res, key=lambda n: (n == REMOTE_TIER,
+                                          self.hierarchy.rank(res[n]),
+                                          abs(n - at)))
+            src_tier = res[src]
+            dst_tier = self.hierarchy.top
+            est = (self.hierarchy.media_seconds(nbytes, src_tier)
+                   + self.hierarchy.media_seconds(nbytes, dst_tier))
+            hop = TierHop(src, src_tier, at, dst_tier, nbytes, est)
+            t = Transfer(name, nbytes, src, at, src_tier=src_tier,
+                         dst_tier=dst_tier, est_seconds=est, kind="fetch",
+                         hops=(hop,))
+            self._touch(name, src, src_tier)
             self.bytes_moved += nbytes
+            if src == REMOTE_TIER:
+                self.remote_bytes += nbytes
+            self.tier_reads[src_tier] = (self.tier_reads.get(src_tier, 0.0)
+                                         + nbytes)
             self.transfers.append(t)
         return value, t
+
+    def promote(self, name: str, node: int, tier: str | None = None) -> Placement:
+        """Explicitly move a replica already resident on ``node`` to ``tier``
+        (default: top) — the storage half of a device-targeted prefetch. Use
+        :meth:`replicate` to create a replica on a new node."""
+        want = self.hierarchy.normalize(tier)
+        with self._lock:
+            res = self._residency.get(name)
+            if res is None or node not in res:
+                raise KeyError(f"{name!r} has no replica on node {node}")
+            have = res[node]
+            if have != want:
+                if self.hierarchy.rank(want) < self.hierarchy.rank(have):
+                    self.promotions += 1       # moved up-tier; down is a pin
+                self._admit(name, node, want)
+            self._sync_placement(name)
+        return self.stat(name)
 
     def migrate(self, name: str, loc: Any) -> Transfer:
         """Re-pin an object (the runtime->FS feedback channel).
@@ -263,27 +639,70 @@ class LocStore:
         new.xattr.update(p.xattr)
         new.xattr["migrated_from"] = p.nodes
         with self._lock:
-            value = self._values[name]
-            nbytes = sizeof(value)
+            nbytes = self._sizes.get(name, 0.0)
             src = p.real_loc
             self.migrations += 1
             if not set(new.nodes) & set(p.nodes):
                 self.bytes_moved += nbytes
-        self.loc.record(name, new)
-        return Transfer(name, nbytes, src, new.real_loc)
+                if src == REMOTE_TIER or REMOTE_TIER in new.nodes:
+                    self.remote_bytes += nbytes
+            for n, t in list(self._residency.get(name, {}).items()):
+                self._drop_replica(name, n, t)
+            self._residency.pop(name, None)
+            self._residency[name] = {}
+            want = self.hierarchy.normalize(new.tier)
+            for n in new.nodes:
+                self._admit(name, n, "remote" if n == REMOTE_TIER else want,
+                            spill=n != REMOTE_TIER)
+            nodes = tuple(self._residency[name].keys())
+            tiers = tuple(self._residency[name].values())
+        final = Placement(nodes=nodes, tier=tiers[0], tiers=tiers,
+                          xattr=new.xattr)
+        self.loc.record(name, final)
+        return Transfer(name, nbytes, src, final.real_loc,
+                        src_tier=p.tier, dst_tier=final.tier, kind="fetch")
 
-    def replicate(self, name: str, extra_nodes: Iterable[int]) -> Placement:
-        """Add replicas (used by the prefetch engine: the original stays)."""
-        p = self.stat(name)
-        nodes = tuple(dict.fromkeys((*p.nodes, *extra_nodes)))
-        new = Placement(nodes=nodes, tier=p.tier, xattr=dict(p.xattr))
-        self.loc.record(name, new)
-        return new
+    def replicate(self, name: str, extra_nodes: Iterable[int],
+                  tier: str | None = None) -> Placement:
+        """Add replicas (used by the prefetch engine: the original stays).
+
+        ``tier`` targets a tier on the new nodes (default: top — a prefetch
+        is supposed to land the data in the fastest memory).
+        """
+        self.stat(name)                       # raises KeyError if unknown
+        want = self.hierarchy.normalize(tier)
+        with self._lock:
+            for n in extra_nodes:
+                self._admit(name, int(n),
+                            "remote" if int(n) == REMOTE_TIER else want,
+                            spill=int(n) != REMOTE_TIER)
+            self._sync_placement(name)
+        return self.stat(name)
 
     def delete(self, name: str) -> None:
         with self._lock:
             self._values.pop(name, None)
+            for n, t in list(self._residency.get(name, {}).items()):
+                self._drop_replica(name, n, t)
+            self._residency.pop(name, None)
+            self._sizes.pop(name, None)
         self.loc.drop(name)
+
+    def forget_replica(self, name: str, node: int) -> None:
+        """Drop one node's replica from the residency map (failure handling).
+
+        Dropping the LAST replica deletes the object entirely — the data is
+        lost and ``exists()`` turns False so the caller can re-run the
+        producer (what the simulator's failure path does)."""
+        with self._lock:
+            res = self._residency.get(name)
+            if res is None or node not in res:
+                return
+            self._drop_replica(name, node, res[node])
+            if res:
+                self._sync_placement(name)
+            else:
+                self.delete(name)
 
     # ------------------------------------------------------------ reporting
     def movement_report(self) -> Mapping[str, float]:
@@ -292,13 +711,39 @@ class LocStore:
             "bytes_moved": self.bytes_moved,
             "bytes_local": self.bytes_local,
             "locality_hit_rate": (self.bytes_local / total) if total else 1.0,
+            "remote_bytes": self.remote_bytes,
+            "bytes_demoted": self.bytes_demoted,
+            "demotions": float(self.demotions),
+            "promotions": float(self.promotions),
             "migrations": float(self.migrations),
             "transfers": float(len(self.transfers)),
         }
+
+    def tier_report(self) -> Mapping[str, Mapping[str, float]]:
+        """Per-tier residency and read traffic across all nodes."""
+        out: dict[str, dict[str, float]] = {
+            t: {"resident_bytes": 0.0, "bytes_read": 0.0, "replicas": 0.0}
+            for t in self.hierarchy.names()}
+        with self._lock:
+            for (_, tier), used in self._usage.items():
+                out.setdefault(tier, {"resident_bytes": 0.0, "bytes_read": 0.0,
+                                      "replicas": 0.0})
+                out[tier]["resident_bytes"] += used
+            for res in self._residency.values():
+                for _, tier in res.items():
+                    out[tier]["replicas"] += 1
+            for tier, nb in self.tier_reads.items():
+                out[tier]["bytes_read"] += nb
+        return out
 
     def reset_accounting(self) -> None:
         with self._lock:
             self.transfers.clear()
             self.bytes_moved = 0.0
             self.bytes_local = 0.0
+            self.remote_bytes = 0.0
+            self.bytes_demoted = 0.0
+            self.demotions = 0
+            self.promotions = 0
             self.migrations = 0
+            self.tier_reads.clear()

@@ -10,6 +10,13 @@ Two modes, one interface:
   dispatch IS the pipeline); the engine keeps the in-flight handle and
   ``wait()`` blocks on readiness only if the consumer arrives early.
 
+Every prefetch targets a storage **tier** on the destination node: ``"hbm"``
+means device prefetch (the replica is promoted into device memory and, when a
+``device_of`` map is present, actually ``device_put``); lower tiers stage into
+host DRAM or the burst buffer without occupying device memory. A flat store
+clamps unknown tiers to its top tier, so the engine works unchanged against
+the original two-tier model.
+
 The engine is deliberately small: policy lives in the ProactiveScheduler; this
 is only the data plane.
 """
@@ -42,21 +49,22 @@ class PrefetchEngine:
         self.bytes_prefetched = 0.0
 
     # ------------------------------------------------------------------ api
-    def submit(self, name: str, dst: int) -> Future:
-        """Start pipelining ``name`` to node ``dst`` (idempotent)."""
+    def submit(self, name: str, dst: int, *, tier: str = "hbm") -> Future:
+        """Start pipelining ``name`` to node ``dst``'s ``tier`` (idempotent
+        per (name, dst) — the first requested tier wins)."""
         key = (name, dst)
         with self._lock:
             fut = self._inflight.get(key)
             if fut is not None:
                 return fut
-            fut = self._pool.submit(self._stage, name, dst)
+            fut = self._pool.submit(self._stage, name, dst, tier)
             self._inflight[key] = fut
             self.submitted += 1
             return fut
 
-    def _stage(self, name: str, dst: int) -> Any:
+    def _stage(self, name: str, dst: int, tier: str) -> Any:
         value, tr = self.store.get(name)  # metadata read, no accounting
-        if self.device_of is not None:
+        if tier == "hbm" and self.device_of is not None:
             try:
                 import jax
                 dev = self.device_of(dst)
@@ -66,7 +74,7 @@ class PrefetchEngine:
                         self._device_copies[(name, dst)] = value
             except Exception:
                 pass  # host-level replication still proceeds
-        placement = self.store.replicate(name, [dst])
+        placement = self.store.replicate(name, [dst], tier=tier)
         with self._lock:
             self.completed += 1
             self.bytes_prefetched += float(placement.xattr.get("size", 0.0))

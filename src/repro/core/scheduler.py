@@ -40,6 +40,15 @@ class ClusterView(Protocol):
     def worker_speed(self, node: int) -> float:
         """Relative throughput (1.0 = nominal). Stragglers report < 1."""
         ...
+    def tier_gbps(self, tier: str) -> float:
+        """Sustained media bandwidth of a storage tier (inf = free). Views
+        without a storage hierarchy may omit this — costs fall back to the
+        flat link-only model."""
+        ...
+    def top_tier(self) -> str:
+        """Name of the fastest node-local tier (where fetches land). Views
+        may omit this; the cost model assumes "hbm"."""
+        ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,12 +62,14 @@ class Assignment:
 @dataclasses.dataclass(frozen=True)
 class PrefetchRequest:
     """"Tell the file system to start pipelining the data to the target
-    server" — one input dataset to stage onto ``dst``."""
+    server" — one input dataset to stage onto ``dst``, into ``tier`` (device
+    prefetch = promote to "hbm"; a flat store clamps to its top tier)."""
 
     data_name: str
     dst: int
     for_task: str
     est_bytes: float
+    tier: str = "hbm"
 
 
 class SchedulerBase:
@@ -75,29 +86,55 @@ class SchedulerBase:
             self._counter += 1
 
     # -- costs ----------------------------------------------------------------
+    @staticmethod
+    def _tier_seconds(cluster: ClusterView, tier: str | None,
+                      size: float) -> float:
+        """Media time of reading ``size`` bytes out of ``tier`` — 0 when the
+        cluster view exposes no storage hierarchy (flat two-tier model)."""
+        if tier is None:
+            return 0.0
+        fn = getattr(cluster, "tier_gbps", None)
+        if fn is None:
+            return 0.0
+        bw = fn(tier)
+        return 0.0 if bw == float("inf") else size / bw
+
     def move_seconds(self, tid: str, node: int, cluster: ClusterView,
                      *, assume: dict[str, int] | None = None) -> float:
         """Data-movement cost of running ``tid`` on ``node`` (paper's second
-        scoring term). Missing inputs fall back to ``assume`` (estimated
-        producer locations) or the remote tier — "estimated and not accurate".
+        scoring term), tier-aware: a replica on ``node`` but parked in a slow
+        tier (burst buffer) still costs its media read time, and a remote
+        fetch pays the source tier's media time on top of the link. Missing
+        inputs fall back to ``assume`` (estimated producer locations) or the
+        remote tier — "estimated and not accurate".
         """
+        # fetched data lands in the destination's top tier; mirror the store's
+        # Transfer.est_seconds (src read + link + dst write) so the estimate
+        # matches what the simulator charges
+        dst_tier = getattr(cluster, "top_tier", lambda: "hbm")()
         total = 0.0
         for name in self.wf.graph.tasks[tid].inputs:
             p = cluster.locate(name)
             size = self.wf.sizes.get(name, 0.0)
+            src_tier: str | None = None
             if p is not None:
                 if p.resident_on(node):
+                    total += self._tier_seconds(cluster, p.tier_on(node), size)
                     continue
                 src = p.real_loc
+                src_tier = p.tier_on(src)
             elif assume and name in assume:
                 src = assume[name]
                 if src == node:
                     continue
             else:
                 src = REMOTE_TIER
+                src_tier = "remote"
             bw = cluster.link_gbps(src, node)
             if bw != float("inf"):
                 total += size / bw
+            total += self._tier_seconds(cluster, src_tier, size)
+            total += self._tier_seconds(cluster, dst_tier, size)
         return total
 
     # -- interface -------------------------------------------------------------
@@ -215,10 +252,12 @@ class ProactiveScheduler(LocalityScheduler):
     """
 
     def __init__(self, wf: CompiledWorkflow, *, speed_aware: bool = False,
-                 min_inputs_ready: int = 1, horizon: int = 64) -> None:
+                 min_inputs_ready: int = 1, horizon: int = 64,
+                 prefetch_tier: str = "hbm") -> None:
         super().__init__(wf, speed_aware=speed_aware)
         self.min_inputs_ready = min_inputs_ready
         self.horizon = horizon
+        self.prefetch_tier = prefetch_tier
         self.preassignment: dict[str, int] = {}
         self._prefetched: set[tuple[str, int]] = set()
 
@@ -253,7 +292,8 @@ class ProactiveScheduler(LocalityScheduler):
                         self._prefetched.add(key)
                         reqs.append(PrefetchRequest(
                             data_name=name, dst=node, for_task=tid,
-                            est_bytes=self.wf.sizes.get(name, 0.0)))
+                            est_bytes=self.wf.sizes.get(name, 0.0),
+                            tier=self.prefetch_tier))
         return reqs
 
     # -- ready-task pass --------------------------------------------------------

@@ -4,8 +4,10 @@
 Models exactly the quantities the paper's argument rests on:
 
 * workers (one task slot each, optional per-node speed factors = stragglers),
-* a two-tier store (compute-node LocStore + remote parallel-FS tier), with
-  every byte fetched across the network accounted,
+* the tiered LocStore (per-node HBM/DRAM/burst-buffer capacities + the remote
+  parallel-FS tier; default: the paper's flat two-tier model), with every byte
+  fetched across the network — and every capacity-pressure demotion —
+  accounted,
 * per-destination NIC serialization (transfers to one node queue up),
 * per-task **I/O wait** (assignment -> inputs resident), the number the paper's
   proactive pipelining is designed to drive to ~zero,
@@ -24,7 +26,8 @@ import heapq
 import itertools
 from typing import Callable, Mapping, Sequence
 
-from repro.core.locstore import LocStore, Placement, REMOTE_TIER, SimObject
+from repro.core.locstore import (LocStore, Placement, REMOTE_TIER, SimObject,
+                                 StorageHierarchy)
 from repro.core.scheduler import (Assignment, ClusterView, ProactiveScheduler,
                                   SchedulerBase)
 from repro.core.wfcompiler import CompiledWorkflow, HardwareModel, TPU_V5E
@@ -43,6 +46,10 @@ class SimResult:
     tasks_done: int
     reruns: int                   # failure-induced re-executions
     task_records: dict[str, dict] = dataclasses.field(default_factory=dict)
+    remote_bytes: float = 0.0     # network bytes to/from the PFS tier
+    bytes_demoted: float = 0.0    # capacity-pressure eviction traffic
+    demotions: int = 0
+    promotions: int = 0
 
     @property
     def locality_hit_rate(self) -> float:
@@ -59,6 +66,10 @@ class SimResult:
             "io_wait_max_s": self.io_wait_max,
             "tasks": float(self.tasks_done),
             "reruns": float(self.reruns),
+            "remote_bytes": self.remote_bytes,
+            "bytes_demoted": self.bytes_demoted,
+            "demotions": float(self.demotions),
+            "promotions": float(self.promotions),
         }
 
 
@@ -83,6 +94,12 @@ class SimCluster(ClusterView):
     def link_gbps(self, src: int, dst: int) -> float:
         return self.hw.link_gbps(src, dst)
 
+    def tier_gbps(self, tier: str) -> float:
+        return self.store.hierarchy.bw(tier)
+
+    def top_tier(self) -> str:
+        return self.store.hierarchy.top
+
     def worker_speed(self, node: int) -> float:
         return self.speeds.get(node, 1.0)
 
@@ -105,12 +122,13 @@ class WorkflowSimulator:
         failures: Sequence[tuple[float, int]] = (),
         external_loc: str = "remote",   # "remote" | "scattered"
         proactive: bool | None = None,
+        hierarchy: StorageHierarchy | None = None,
     ) -> None:
         self.wf = wf
         self.sched = scheduler
         self.hw = hw
         self.n_nodes = n_nodes
-        self.store = LocStore(n_nodes)
+        self.store = LocStore(n_nodes, hierarchy=hierarchy)
         self.cluster = SimCluster(n_nodes, hw, self.store, speeds)
         self.failures = sorted(failures)
         self.proactive = (isinstance(scheduler, ProactiveScheduler)
@@ -147,6 +165,7 @@ class WorkflowSimulator:
         records: dict[str, dict] = {}
         done = 0
         total = len(wf.graph.tasks)
+        xfer_cursor = 0               # store.transfers scanned so far
 
         ready: set[str] = {tid for tid, n in unfinished_preds.items() if n == 0}
         for tid in ready:
@@ -156,14 +175,36 @@ class WorkflowSimulator:
             return self.store.exists(name)
 
         def fetch_time(name: str, dst: int, t0: float) -> float:
-            """Queue one input fetch on dst's NIC; returns completion time."""
+            """Queue one input fetch on dst's NIC; returns completion time.
+
+            A local hit still costs its resident tier's media time (reading a
+            burst-buffer replica is not free, just cheaper than the PFS); a
+            network fetch pays link + per-tier-hop media time.
+            """
             value, tr = self.store.get(name, at=dst)
-            if tr is None or tr.local:
+            if tr is None:
                 return t0
-            dur = self.hw.move_seconds(tr.nbytes, tr.src, dst)
+            if tr.local:
+                return t0 + tr.est_seconds
+            dur = self.hw.move_seconds(tr.nbytes, tr.src, dst) + tr.est_seconds
             start = max(nic_free[dst], t0)
             nic_free[dst] = start + dur
             return start + dur
+
+        def drain_eviction_traffic(t0: float) -> None:
+            """Charge capacity-pressure demotions that spilled to the PFS to
+            the evicting node's background NIC channel — eviction write-back
+            competes with prefetch for idle network time."""
+            nonlocal xfer_cursor
+            new = self.store.transfers[xfer_cursor:]
+            xfer_cursor = len(self.store.transfers)
+            for tr in new:
+                if tr.kind != "demote" or tr.dst != REMOTE_TIER:
+                    continue
+                if 0 <= tr.src < self.n_nodes:
+                    dur = (self.hw.move_seconds(tr.nbytes, tr.src, REMOTE_TIER)
+                           + tr.est_seconds)
+                    nic_bg_free[tr.src] = max(nic_bg_free[tr.src], t0) + dur
 
         def start_assignment(a: Assignment, t0: float) -> None:
             nonlocal done
@@ -184,6 +225,7 @@ class WorkflowSimulator:
 
         def schedule_pass(t0: float) -> None:
             nonlocal bytes_prefetched
+            drain_eviction_traffic(t0)
             if ready and self.cluster.free_workers():
                 for a in sched.select(sorted(ready), self.cluster):
                     ready.discard(a.tid)
@@ -198,12 +240,16 @@ class WorkflowSimulator:
                     if p is None or p.resident_on(req.dst):
                         continue
                     src = p.real_loc
-                    dur = self.hw.move_seconds(req.est_bytes, src, req.dst)
+                    hier = self.store.hierarchy
+                    dst_tier = hier.normalize(req.tier)
+                    dur = (self.hw.move_seconds(req.est_bytes, src, req.dst)
+                           + hier.media_seconds(req.est_bytes, p.tier_on(src))
+                           + hier.media_seconds(req.est_bytes, dst_tier))
                     start = max(nic_bg_free[req.dst], nic_free[req.dst], t0)
                     nic_bg_free[req.dst] = start + dur
                     bytes_prefetched += req.est_bytes
                     heapq.heappush(events, (start + dur, next(seq), _XFER_DONE,
-                                            (req.data_name, req.dst)))
+                                            (req.data_name, req.dst, dst_tier)))
 
         def fail_node(node: int, t0: float) -> None:
             nonlocal reruns
@@ -221,9 +267,8 @@ class WorkflowSimulator:
             for name in self.store.loc.names():
                 p = self.store.loc.lookup(name)
                 if p and node in p.nodes:
-                    nodes = tuple(n for n in p.nodes if n != node)
-                    if nodes:
-                        self.store.loc.record(name, Placement(nodes, p.tier, p.xattr))
+                    if len(p.nodes) > 1:
+                        self.store.forget_replica(name, node)
                     else:
                         lost.append(name)
             nonlocal done
@@ -262,9 +307,9 @@ class WorkflowSimulator:
                         state[s] = "ready"
                         ready.add(s)
             elif kind == _XFER_DONE:
-                name, dst = payload  # type: ignore[misc]
+                name, dst, dst_tier = payload  # type: ignore[misc]
                 if self.store.exists(name) and dst not in self.cluster.failed:
-                    self.store.replicate(name, [dst])
+                    self.store.replicate(name, [dst], tier=dst_tier)
             elif kind == _FAIL:
                 fail_node(payload, now)  # type: ignore[arg-type]
             schedule_pass(now)
@@ -287,6 +332,10 @@ class WorkflowSimulator:
             tasks_done=done,
             reruns=reruns,
             task_records=records,
+            remote_bytes=rep["remote_bytes"],
+            bytes_demoted=rep["bytes_demoted"],
+            demotions=int(rep["demotions"]),
+            promotions=int(rep["promotions"]),
         )
 
     def _invalidate(self, tid: str, state: dict, unfinished_preds: dict,

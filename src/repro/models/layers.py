@@ -13,7 +13,6 @@ statistics in f32 — the standard TPU mixed-precision recipe.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

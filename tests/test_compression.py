@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import Mesh
 
 from repro.dist.compression import (compressed_psum, compression_ratio,

@@ -6,9 +6,9 @@ rules are testable on a 1-CPU container.
 
 import jax
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import AbstractMesh
 
-from repro.configs import get_config, get_smoke
+from repro.configs import get_config
 from repro.dist import sharding as shd
 from repro.launch.specs import (batch_specs_for, decode_specs_for,
                                 params_specs_for)

@@ -11,7 +11,7 @@ import pytest
 
 from repro.configs import get_smoke
 from repro.train import checkpoint as ckpt
-from repro.train.elastic import elastic_restore, shard_targets
+from repro.train.elastic import elastic_restore
 from repro.train.loop import TrainConfig, train
 from repro.train.optimizer import (OptConfig, adamw_update, global_norm,
                                    init_opt_state, schedule)
