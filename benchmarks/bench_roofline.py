@@ -93,13 +93,16 @@ def load(path: str = DRYRUN) -> list[dict]:
     return list(recs.values())
 
 
-def run(report) -> None:
+def run(report, quick: bool = False) -> None:
     if not os.path.exists(DRYRUN):
         report("roofline/missing", 0.0, f"run launch/dryrun.py first ({DRYRUN})")
         return
     recs = [r for r in load() if r.get("ok")]
+    recs = sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    if quick:                   # smoke scale: a handful of cells, not the grid
+        recs = recs[:4]
     worst = None
-    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+    for r in recs:
         t = terms(r)
         name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
         report(name, t["dominant_s"] * 1e6,

@@ -47,7 +47,8 @@ def _tiered(cap: float) -> StorageHierarchy:
 
 
 def run(report, quick: bool = False) -> None:
-    # (a) capacity sweep, tiered vs flat
+    # (a) capacity sweep, tiered vs flat. Derived metrics are key=value
+    # tokens so benchmarks/check_trend.py can gate them across PRs.
     width = 16 if quick else 32
     caps = (0.5, 2.0) if quick else (0.25, 0.5, 1.0, 2.0, 8.0)
     wf = compile_workflow(montage_workflow(width), HPC_CLUSTER)
@@ -59,13 +60,14 @@ def run(report, quick: bool = False) -> None:
                       hierarchy=_tiered(cap))
         saved = 1.0 - rt.remote_bytes / max(rf.remote_bytes, 1e-9)
         report(f"tiers/sweep/cap{cap_gb}g", 0.0,
-               f"remote {rf.remote_bytes/GB:.1f}->{rt.remote_bytes/GB:.1f}GiB "
-               f"(-{saved:.0%}) io_wait {rf.io_wait_total:.0f}->"
-               f"{rt.io_wait_total:.0f}s makespan {rf.makespan:.0f}->"
-               f"{rt.makespan:.0f}s demotions={rt.demotions}")
+               f"remote_gib={rt.remote_bytes/GB:.2f} "
+               f"remote_flat_gib={rf.remote_bytes/GB:.2f} saved={saved:.0%} "
+               f"io_wait_s={rt.io_wait_total:.1f} "
+               f"io_wait_flat_s={rf.io_wait_total:.1f} "
+               f"makespan_s={rt.makespan:.1f} demotions={rt.demotions}")
 
     # (b) store-level cyclic trace: working set 2x the host tier
-    n = 64 if quick else 256
+    n = 32 if quick else 256
     obj = 64 * (1 << 20)                       # 64 MiB objects
     cap = n * obj / 2.0
     for label, hier in (("flat", _flat(cap)), ("tiered", _tiered(cap))):
@@ -80,7 +82,7 @@ def run(report, quick: bool = False) -> None:
         rep = st.movement_report()
         ops = n * 3
         report(f"tiers/trace/{label}", dt * 1e6 / ops,
-               f"remote={rep['remote_bytes']/GB:.1f}GiB "
+               f"remote_gib={rep['remote_bytes']/GB:.2f} "
                f"demotions={int(rep['demotions'])} "
                f"promotions={int(rep['promotions'])} "
                f"hit={rep['locality_hit_rate']:.0%}")

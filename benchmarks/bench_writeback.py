@@ -1,0 +1,135 @@
+"""E8 — async write-back and cluster-coordinated eviction earn their keep.
+
+Three measurements on the montage workflow under tight per-node capacity
+(the regime where PR 2's write-through demotion pays a synchronous PFS write
+on the demand NIC lane for every spill):
+
+  (a) **policy sweep** (headline): write-through vs async write-back vs
+      write-back + coordinated eviction, per capacity point. Write-back moves
+      the flush to the background lane (and drops already-flushed replicas
+      for free), so critical-path I/O wait falls; coordination additionally
+      drops replicas that are duplicated elsewhere instead of re-writing
+      them to the PFS, so remote bytes fall.
+
+  (b) **store-level reuse trace**: a cyclic working set ~1.6x the node
+      tiers — every object is flushed to the PFS at most ONCE; re-evictions
+      of PFS-backed replicas are free clean drops under both policies (the
+      ledger/scalar consistency the cross-check test pins down), and
+      write-back additionally takes the one flush off the caller's path.
+
+  (c) **write-around**: streaming run-once outputs bypass the node tiers
+      entirely, so they stop evicting the hot working set.
+
+In-bench assertions (the PR 3 acceptance criteria):
+  * async write-back reduces critical-path io-wait vs write-through at the
+    tight capacity points,
+  * coordinated eviction never drops a sole fast-tier copy anywhere in the
+    sweep (``coordination_violations == 0`` and every dataset resolvable).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (HPC_CLUSTER, ProactiveScheduler, StorageHierarchy,
+                        TierSpec, compile_workflow)
+from repro.core.locstore import LocStore, SimObject
+from repro.core.simulator import WorkflowSimulator
+from repro.core.workloads import montage_workflow
+
+GB = float(1 << 30)
+REMOTE_GBPS = 0.5e9
+
+
+def _tiered(cap: float) -> StorageHierarchy:
+    return StorageHierarchy(
+        [TierSpec("hbm", cap / 4, 819e9),
+         TierSpec("host", cap, 100e9),
+         TierSpec("bb", 16 * cap, 8e9)],
+        remote=TierSpec("remote", float("inf"), REMOTE_GBPS))
+
+
+POLICIES = (("through", {}),
+            ("back", {"write_policy": "back"}),
+            ("back_coord", {"write_policy": "back",
+                            "coordinated_eviction": True}))
+
+
+def run(report, quick: bool = False) -> None:
+    # (a) policy sweep under capacity pressure; tight points assert the win
+    width = 16 if quick else 24
+    caps = (0.125, 0.25) if quick else (0.125, 0.25, 0.5, 1.0)
+    tight = set(caps[:2])
+    wf = compile_workflow(montage_workflow(width), HPC_CLUSTER)
+    for cap_gb in caps:
+        results = {}
+        for label, kw in POLICIES:
+            sim = WorkflowSimulator(wf, ProactiveScheduler(wf), n_nodes=4,
+                                    hw=HPC_CLUSTER,
+                                    hierarchy=_tiered(cap_gb * GB), **kw)
+            r = sim.run()
+            results[label] = r
+            # coordinated eviction must never cost data: no sole copy is
+            # ever dropped, and every dataset stays resolvable
+            assert sim.store.coordination_violations == 0, \
+                f"sole-copy drop at cap={cap_gb}g policy={label}"
+            assert r.tasks_done == len(wf.graph.tasks)
+            for name in sim.store.loc.names():
+                assert sim.store.exists(name)
+            report(f"writeback/sweep/cap{cap_gb}g/{label}", 0.0,
+                   f"io_wait_s={r.io_wait_total:.1f} "
+                   f"remote_gib={r.remote_bytes/GB:.2f} "
+                   f"makespan_s={r.makespan:.1f} writebacks={r.writebacks} "
+                   f"clean_drops={r.clean_drops} coord_drops={r.coord_drops}")
+        if cap_gb in tight:
+            thru, back = results["through"], results["back"]
+            assert back.writebacks > 0, f"no write-backs at cap={cap_gb}g"
+            assert back.io_wait_total < thru.io_wait_total, (
+                f"write-back did not cut io-wait at cap={cap_gb}g: "
+                f"{back.io_wait_total:.1f} !< {thru.io_wait_total:.1f}")
+
+    # (b) store-level reuse trace: flushed-once, re-evicted free. The node
+    # tiers hold ~60% of the working set, so the cyclic reuse keeps cycling
+    # objects through the PFS boundary — each object pays its flush at most
+    # once; every later eviction of a PFS-backed replica is a free drop.
+    n = 32 if quick else 128
+    obj = 64 * (1 << 20)
+    cap = n * obj / 2.0
+    trace_hier = StorageHierarchy(
+        [TierSpec("hbm", cap / 4, 819e9),
+         TierSpec("host", cap / 2, 100e9),
+         TierSpec("bb", cap / 2, 8e9)],
+        remote=TierSpec("remote", float("inf"), REMOTE_GBPS))
+    for label, kw in (("through", {}), ("back", {"write_policy": "back"})):
+        st = LocStore(1, hierarchy=trace_hier, **kw)
+        t0 = time.perf_counter()
+        for i in range(n):
+            st.put(f"o{i}", SimObject(float(obj)), loc=0)
+        for _ in range(2):                    # cyclic reuse: re-stage, re-evict
+            st.drain_writebacks()
+            for i in range(n):
+                st.get(f"o{i}", at=0)
+                st.replicate(f"o{i}", [0])
+        st.drain_writebacks()
+        dt = time.perf_counter() - t0
+        rep = st.movement_report()
+        assert rep["writebacks"] <= n, "an object was flushed more than once"
+        assert rep["clean_drops"] > 0, "reuse rounds produced no free drops"
+        report(f"writeback/trace/{label}", dt * 1e6 / (n * 5),
+               f"remote_gib={rep['remote_bytes']/GB:.2f} "
+               f"writebacks={int(rep['writebacks'])} "
+               f"clean_drops={int(rep['clean_drops'])} "
+               f"demotions={int(rep['demotions'])}")
+
+    # (c) write-around keeps streaming outputs off the node tiers
+    st = LocStore(1, hierarchy=_tiered(cap))
+    for i in range(n):                        # hot working set fills the tiers
+        st.put(f"hot{i}", SimObject(float(obj)), loc=0, tier="host")
+    st.reset_accounting()
+    for i in range(n):
+        st.put(f"stream{i}", SimObject(float(obj)), loc=0, mode="around")
+    rep = st.movement_report()
+    report("writeback/around/stream", 0.0,
+           f"remote_gib={rep['remote_bytes']/GB:.2f} "
+           f"demotions={int(rep['demotions'])}")
+    assert rep["demotions"] == 0, "write-around must not evict the hot set"

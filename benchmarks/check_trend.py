@@ -1,0 +1,136 @@
+"""Perf-trend gate: fail CI when the current benchmark run regresses >2x
+against the latest committed baseline (PR 3 satellite).
+
+Usage (the CI --quick job runs it right after ``run.py --quick``)::
+
+    python benchmarks/check_trend.py                      # auto baseline
+    python benchmarks/check_trend.py --baseline BENCH_3.json --threshold 2.0
+
+* **Current run**: ``results/benchmarks.json`` (what run.py just wrote).
+* **Baseline**: the highest-numbered ``BENCH_<n>.json`` committed at the repo
+  root. Baselines are committed from ``--quick`` runs so CI compares like
+  with like; commit a fresh ``BENCH_<n+1>.json`` per PR to ratchet.
+* **Watched metrics**: ``key=value`` tokens in a row's ``derived`` string
+  whose key mentions ``remote`` or ``io_wait`` — the two headline quantities
+  of the paper's data-movement argument (remote-PFS bytes, critical-path I/O
+  wait). Rows absent from either side, non-token formats, and near-zero
+  baselines (< EPS, where timing noise dominates) are skipped.
+
+Exit code 1 lists every regression; 0 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import json
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WATCHED = ("remote", "io_wait")
+EPS = 0.05                      # ignore baselines this small (noise floor)
+_TOKEN = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)="
+                    r"([-+]?[0-9]*\.?[0-9]+(?:[eE][-+]?[0-9]+)?)(?![->\d])")
+
+
+@dataclasses.dataclass(frozen=True)
+class Regression:
+    name: str
+    metric: str
+    baseline: float
+    current: float
+
+    @property
+    def ratio(self) -> float:
+        return (self.current / self.baseline if self.baseline
+                else float("inf"))
+
+    def __str__(self) -> str:
+        return (f"{self.name}: {self.metric} {self.baseline:g} -> "
+                f"{self.current:g} ({self.ratio:.2f}x)")
+
+
+def parse_metrics(derived: str) -> dict[str, float]:
+    """``key=value`` tokens with trailing units stripped; ``a 10->20s`` arrow
+    forms are prose, not metrics."""
+    return {k: float(v) for k, v in _TOKEN.findall(derived)}
+
+
+def latest_baseline(root: str = ROOT) -> str | None:
+    best, best_n = None, -1
+    for path in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(path))
+        if m and int(m.group(1)) > best_n:
+            best, best_n = path, int(m.group(1))
+    return best
+
+
+def regressions(current: list[dict], baseline: list[dict],
+                threshold: float = 2.0) -> list[Regression]:
+    base_rows = {r["name"]: parse_metrics(r.get("derived", ""))
+                 for r in baseline}
+    out: list[Regression] = []
+    for row in current:
+        base = base_rows.get(row["name"])
+        if base is None:
+            continue
+        cur = parse_metrics(row.get("derived", ""))
+        for key, base_val in base.items():
+            if not any(w in key for w in WATCHED):
+                continue
+            if key not in cur:
+                continue
+            if base_val < EPS:
+                # a ~zero baseline can't be ratioed, but traffic appearing
+                # from nothing (the PR-2 class of bug) must still fail
+                if cur[key] > 2 * EPS:
+                    out.append(Regression(row["name"], key, base_val,
+                                          cur[key]))
+                continue
+            if cur[key] > threshold * base_val:
+                out.append(Regression(row["name"], key, base_val, cur[key]))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default=os.path.join(ROOT, "results",
+                                                      "benchmarks.json"))
+    ap.add_argument("--baseline", default=None,
+                    help="baseline BENCH_<n>.json (default: latest committed)")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="fail when current > threshold * baseline")
+    args = ap.parse_args()
+
+    baseline_path = args.baseline or latest_baseline()
+    if baseline_path is None:
+        print("check_trend: no committed BENCH_<n>.json baseline — skipping")
+        return 0
+    if not os.path.exists(args.current):
+        print(f"check_trend: no current run at {args.current} — "
+              f"run benchmarks/run.py first", file=sys.stderr)
+        return 1
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+
+    bad = regressions(current, baseline, args.threshold)
+    compared = sum(1 for r in current
+                   if r["name"] in {b["name"] for b in baseline})
+    print(f"check_trend: {compared} shared rows vs "
+          f"{os.path.basename(baseline_path)}, threshold {args.threshold}x")
+    if bad:
+        print(f"FAILED: {len(bad)} perf regression(s):", file=sys.stderr)
+        for r in bad:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print("check_trend: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,11 +10,14 @@ results/benchmarks.json).
   E5 bench_serving   — location-aware routing saves prefills
   E6 bench_roofline  — roofline terms per (arch × shape × mesh) dry-run cell
   E7 bench_tiers     — storage hierarchy vs flat store under capacity pressure
+  E8 bench_writeback — async write-back + coordinated eviction vs write-through
 
 ``--quick`` runs every module at smoke scale (small shapes, few reps) — the
-CI benchmark job uses it to keep the perf trajectory alive on every push.
+CI benchmark job uses it to keep the perf trajectory alive on every push
+(tests/test_benchmarks_quick.py asserts every module accepts the flag).
 Exits non-zero if any module reported an ``/ERROR`` row, so a crashed
-benchmark cannot green-light CI.
+benchmark cannot green-light CI. ``benchmarks/check_trend.py`` then gates
+the result against the latest committed BENCH_<n>.json.
 """
 
 from __future__ import annotations
@@ -43,9 +46,10 @@ def main() -> int:
 
     from benchmarks import (bench_ablation, bench_locstore, bench_prefetch,
                             bench_roofline, bench_scheduler, bench_serving,
-                            bench_tiers)
+                            bench_tiers, bench_writeback)
     modules = [bench_scheduler, bench_prefetch, bench_ablation,
-               bench_locstore, bench_serving, bench_roofline, bench_tiers]
+               bench_locstore, bench_serving, bench_roofline, bench_tiers,
+               bench_writeback]
 
     rows: list[dict] = []
 

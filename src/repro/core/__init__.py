@@ -13,6 +13,7 @@ from repro.core.hints import Complexity, TaskHints, size_hint, task
 from repro.core.locstore import (FLAT_HIERARCHY, LocationService, LocStore,
                                  Placement, REMOTE_TIER, SimObject,
                                  StorageHierarchy, TierHop, TierSpec, Transfer,
+                                 WriteBackEntry, WriteBackQueue,
                                  tiered_hierarchy)
 from repro.core.prefetch import PrefetchEngine
 from repro.core.scheduler import (Assignment, FCFSScheduler, LocalityScheduler,
@@ -26,7 +27,7 @@ __all__ = [
     "Complexity", "TaskHints", "size_hint", "task",
     "LocationService", "LocStore", "Placement", "REMOTE_TIER", "SimObject",
     "Transfer", "TierHop", "TierSpec", "StorageHierarchy", "FLAT_HIERARCHY",
-    "tiered_hierarchy",
+    "tiered_hierarchy", "WriteBackEntry", "WriteBackQueue",
     "CompiledWorkflow", "HardwareModel", "HPC_CLUSTER", "TPU_V5E",
     "compile_workflow",
     "Assignment", "FCFSScheduler", "LocalityScheduler", "PrefetchRequest",

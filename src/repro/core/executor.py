@@ -49,6 +49,10 @@ class ExecResult:
     bytes_demoted: float = 0.0
     demotions: int = 0
     promotions: int = 0
+    writebacks: int = 0
+    writeback_bytes: float = 0.0
+    clean_drops: int = 0
+    coord_drops: int = 0
 
     @property
     def locality_hit_rate(self) -> float:
@@ -76,6 +80,9 @@ class _ExecCluster(ClusterView):
     def top_tier(self) -> str:
         return self.ex.store.hierarchy.top
 
+    def bulk_tier(self) -> str:
+        return self.ex.store.hierarchy.bottom
+
     def worker_speed(self, node: int) -> float:
         return 1.0
 
@@ -92,15 +99,24 @@ class WorkflowExecutor:
         hierarchy: StorageHierarchy | None = None,
         device_of: Callable[[int], Any] | None = None,
         inject_inputs: Mapping[str, Any] | None = None,
+        write_policy: str = "through",
+        coordinated_eviction: bool = False,
     ) -> None:
         if store is not None and hierarchy is not None:
             raise ValueError("pass either store= or hierarchy=, not both — "
                              "an explicit store already owns its hierarchy")
+        if store is not None and (write_policy != "through"
+                                  or coordinated_eviction):
+            raise ValueError("write_policy/coordinated_eviction configure the "
+                             "executor-built store — an explicit store "
+                             "already owns its policies")
         self.wf = wf
         self.sched = scheduler
         self.hw = hw
         self.n_nodes = n_nodes
-        self.store = store or LocStore(n_nodes, hierarchy=hierarchy)
+        self.store = store or LocStore(n_nodes, hierarchy=hierarchy,
+                                       write_policy=write_policy,
+                                       coordinated_eviction=coordinated_eviction)
         self.prefetch = PrefetchEngine(self.store, device_of=device_of)
         self.cluster = _ExecCluster(self)
         self._free: set[int] = set(range(n_nodes))
@@ -109,9 +125,17 @@ class WorkflowExecutor:
         self._running_at: dict[str, int] = {}
         self._records: dict[str, dict] = {}
         self._io_wait = 0.0
+        self._wb_stop = threading.Event()
         for name, value in (inject_inputs or {}).items():
             if not self.store.exists(name):
                 self.store.put(name, value)
+
+    def _wb_drainer(self) -> None:
+        """Background flusher: drains the store's write-back queue while the
+        workers compute — spill-to-PFS never blocks a task body."""
+        while not self._wb_stop.wait(0.002):
+            self.store.drain_writebacks()
+        self.store.drain_writebacks()
 
     # ------------------------------------------------------------------ run
     def run(self) -> ExecResult:
@@ -124,6 +148,9 @@ class WorkflowExecutor:
             state[tid] = "ready"
         pool = ThreadPoolExecutor(max_workers=self.n_nodes,
                                   thread_name_prefix="xflow-worker")
+        wb_thread = threading.Thread(target=self._wb_drainer, daemon=True,
+                                     name="xflow-writeback")
+        wb_thread.start()
         t0 = time.perf_counter()
         done_total = 0
         errors: list[BaseException] = []
@@ -195,6 +222,8 @@ class WorkflowExecutor:
                 self._cv.wait(timeout=0.5)
         pool.shutdown(wait=True)
         self.prefetch.drain()
+        self._wb_stop.set()
+        wb_thread.join(timeout=5.0)
         if errors:
             raise errors[0]
         wall = time.perf_counter() - t0
@@ -215,4 +244,8 @@ class WorkflowExecutor:
             bytes_demoted=rep["bytes_demoted"],
             demotions=int(rep["demotions"]),
             promotions=int(rep["promotions"]),
+            writebacks=int(rep["writebacks"]),
+            writeback_bytes=rep["writeback_bytes"],
+            clean_drops=int(rep["clean_drops"]),
+            coord_drops=int(rep["coord_drops"]),
         )

@@ -27,6 +27,28 @@ default hierarchy is :data:`FLAT_HIERARCHY` (one infinite host tier), which
 reproduces the paper's original two-tier behaviour exactly; pass
 ``tiered_hierarchy()`` to turn capacity pressure on.
 
+**Write policies.** Demotion off the bottom node tier — the spill to the
+parallel FS — supports three modes (``write_policy=`` / ``put(..., mode=)``):
+
+* ``"through"`` (default, the original behaviour): the spill is a synchronous
+  PFS write on the eviction path — the simulator charges it to the demand NIC
+  lane, so it contends with the fetches tasks are waiting on.
+* ``"back"``: per-replica **dirty bits** track whether the PFS already holds
+  the current version. A *clean* victim is simply dropped (the durable copy
+  exists — zero traffic); a *dirty* victim is enqueued on the
+  :class:`WriteBackQueue` and flushed asynchronously (simulator: background
+  NIC lane; executor: drainer thread) so the spill overlaps compute.
+* ``"around"``: run-once streaming outputs are written straight to the PFS,
+  never occupying node tiers, and reads are **read-once** — no replica is
+  cached and ``replicate`` is a no-op for them.
+
+**Coordinated eviction** (``coordinated_eviction=True``): ``_victim`` consults
+the :class:`LocationService` so replicated objects are evicted before sole
+copies, and a replica that is duplicated anywhere else in the cluster is
+*dropped* (free) instead of demoted — node A never writes the last fast-tier
+copy to the PFS while node B holds a cold duplicate. Sole copies are always
+demoted down-tier, never dropped.
+
 Values can be anything sized: JAX arrays (``.nbytes``), numpy arrays, bytes, or
 :class:`SimObject` stand-ins for the simulator. ``get(name, at=node)`` returns
 the value AND a :class:`Transfer` record of the bytes that had to move — with
@@ -36,6 +58,7 @@ this repo is built on.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 import threading
@@ -44,7 +67,10 @@ from typing import Any, Iterable, Mapping, Sequence
 
 __all__ = ["Placement", "SimObject", "Transfer", "TierHop", "TierSpec",
            "StorageHierarchy", "FLAT_HIERARCHY", "tiered_hierarchy",
-           "LocationService", "LocStore", "REMOTE_TIER"]
+           "LocationService", "LocStore", "REMOTE_TIER",
+           "WriteBackEntry", "WriteBackQueue", "WRITE_POLICIES"]
+
+WRITE_POLICIES = ("through", "back", "around")
 
 REMOTE_TIER = -1  # node id of the remote parallel-FS tier (Lustre analogue)
 
@@ -98,6 +124,11 @@ class StorageHierarchy:
     @property
     def top(self) -> str:
         return self.tiers[0].name
+
+    @property
+    def bottom(self) -> str:
+        """The slowest (largest) node-local tier — bulk staging target."""
+        return self.tiers[-1].name
 
     def names(self) -> tuple[str, ...]:
         return tuple(t.name for t in self.tiers) + (self.remote.name,)
@@ -228,7 +259,10 @@ class Transfer:
     src_tier: str = "host"
     dst_tier: str = "host"
     est_seconds: float = 0.0
-    kind: str = "fetch"                 # fetch | demote | promote
+    # fetch | demote | promote | migrate (runtime re-pin) |
+    # spill (put overflow straight to the PFS) |
+    # writeback (async dirty flush) | writearound (streaming PFS write)
+    kind: str = "fetch"
     hops: tuple[TierHop, ...] = ()
 
     @property
@@ -247,6 +281,107 @@ def sizeof(value: Any) -> float:
     if isinstance(value, (bytes, bytearray, memoryview)):
         return float(len(value))
     return float(64)  # opaque python object — metadata-sized
+
+
+# ---------------------------------------------------------------- write-back
+@dataclasses.dataclass(frozen=True)
+class WriteBackEntry:
+    """One dirty replica spilled off the node tiers, awaiting its PFS flush."""
+
+    name: str
+    node: int                 # node the replica was evicted from
+    src_tier: str             # tier it was evicted out of
+    nbytes: float
+    est_seconds: float        # media time of the flush (tier read + PFS write)
+    seq: int                  # enqueue order (drain is FIFO)
+
+
+class WriteBackQueue:
+    """FIFO of pending asynchronous PFS writes.
+
+    The store *enqueues* when a dirty victim falls off the bottom node tier;
+    the runtime *drains* off the critical path (simulator: background NIC
+    lane, executor: drainer thread). Draining an entry is what makes the PFS
+    copy durable — :meth:`LocStore.drain_writebacks` clears the dirty bits.
+    Entries for overwritten/deleted objects are cancelled, not flushed.
+    """
+
+    def __init__(self) -> None:
+        self._q: collections.deque[WriteBackEntry] = collections.deque()
+        self._lock = threading.Lock()
+        self._seq = 0
+        # cancelled entries stay queued as tombstones so every queue slot is
+        # consumed by exactly one pop — the simulator pairs one flush-done
+        # event with one slot, and removal would shift later flushes onto
+        # earlier events' completion times
+        self._cancelled: set[int] = set()
+        self.enqueued = 0
+        self.drained = 0
+        self.cancelled = 0
+        self.bytes_enqueued = 0.0
+        self.bytes_drained = 0.0
+
+    def push(self, name: str, node: int, src_tier: str, nbytes: float,
+             est_seconds: float) -> WriteBackEntry:
+        with self._lock:
+            entry = WriteBackEntry(name, node, src_tier, nbytes, est_seconds,
+                                   self._seq)
+            self._seq += 1
+            self._q.append(entry)
+            self.enqueued += 1
+            self.bytes_enqueued += nbytes
+            return entry
+
+    def pop(self) -> tuple[WriteBackEntry, bool] | None:
+        """Consume one queue slot: (entry, live). ``live=False`` means the
+        entry was cancelled — the caller must not flush it, but the slot
+        still pairs with its scheduled completion."""
+        with self._lock:
+            if not self._q:
+                return None
+            entry = self._q.popleft()
+            if entry.seq in self._cancelled:
+                self._cancelled.discard(entry.seq)
+                return entry, False
+            self.drained += 1
+            self.bytes_drained += entry.nbytes
+            return entry, True
+
+    def cancel(self, name: str) -> int:
+        """Tombstone pending flushes of ``name`` (its version is gone).
+        Returns how many entries were cancelled."""
+        with self._lock:
+            n = 0
+            for e in self._q:
+                if e.name == name and e.seq not in self._cancelled:
+                    self._cancelled.add(e.seq)
+                    n += 1
+            self.cancelled += n
+            return n
+
+    def _live(self) -> list[WriteBackEntry]:
+        return [e for e in self._q if e.seq not in self._cancelled]
+
+    def has(self, name: str) -> bool:
+        with self._lock:
+            return any(e.name == name for e in self._live())
+
+    def pending_bytes(self) -> float:
+        with self._lock:
+            return sum(e.nbytes for e in self._live())
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._live())
+
+    def report(self) -> Mapping[str, float]:
+        with self._lock:
+            return {"enqueued": float(self.enqueued),
+                    "drained": float(self.drained),
+                    "cancelled": float(self.cancelled),
+                    "pending": float(len(self._live())),
+                    "bytes_enqueued": self.bytes_enqueued,
+                    "bytes_drained": self.bytes_drained}
 
 
 class LocationService:
@@ -313,29 +448,51 @@ class LocStore:
     (``eviction_policy``: "lru", or "cost" = largest-coldest-first) down-tier,
     spilling to the remote PFS only below the last node tier. Reads promote
     the touched object back to the top tier (``promote_on_access``).
+
+    ``write_policy`` sets how that spill happens ("through" = synchronous,
+    "back" = dirty-tracked async write-back via :attr:`writeback`); a per-put
+    ``mode=`` overrides it ("around" = stream straight to the PFS, read-once).
+    ``coordinated_eviction`` makes ``_victim`` consult the LocationService:
+    replicas duplicated elsewhere in the cluster are evicted (dropped, free)
+    before sole copies, which are demoted down-tier and never dropped.
     """
 
     def __init__(self, n_nodes: int, *, n_meta_shards: int = 16,
                  default_policy: str = "hash",
                  hierarchy: StorageHierarchy | None = None,
                  eviction_policy: str = "lru",
-                 promote_on_access: bool = True) -> None:
+                 promote_on_access: bool = True,
+                 write_policy: str = "through",
+                 coordinated_eviction: bool = False) -> None:
         if n_nodes < 1:
             raise ValueError("need at least one node")
         if eviction_policy not in ("lru", "cost"):
             raise ValueError(f"unknown eviction policy {eviction_policy!r}")
+        if write_policy not in ("through", "back"):
+            raise ValueError(f"store-wide write policy must be 'through' or "
+                             f"'back', not {write_policy!r} — 'around' is "
+                             f"per-object (put(..., mode='around'))")
         self.n_nodes = n_nodes
         self.loc = LocationService(n_meta_shards)
         self.default_policy = default_policy
         self.hierarchy = hierarchy or FLAT_HIERARCHY
         self.eviction_policy = eviction_policy
         self.promote_on_access = promote_on_access
+        self.write_policy = write_policy
+        self.coordinated_eviction = coordinated_eviction
+        self.writeback = WriteBackQueue()
         self._values: dict[str, Any] = {}
         self._sizes: dict[str, float] = {}
         # replica map: name -> {node: tier} (insertion order = primary first)
         self._residency: dict[str, dict[int, str]] = {}
         self._usage: dict[tuple[int, str], float] = {}
         self._last_access: dict[tuple[int, str], dict[str, int]] = {}
+        # dirty objects: the current version has no durable PFS backing yet.
+        # Replicas never diverge (a put replaces every copy), so the object
+        # bit + the residency map IS the per-replica dirty state —
+        # ``is_dirty(name, node)`` reads it per replica.
+        self._dirty: set[str] = set()
+        self._mode: dict[str, str] = {}       # per-object write mode
         self._clock = 0
         self._lock = threading.RLock()
         self._rr = 0
@@ -349,6 +506,14 @@ class LocStore:
         self.promotions = 0
         self.migrations = 0
         self.tier_reads: dict[str, float] = {}
+        # write-back / coordinated-eviction accounting
+        self.writebacks = 0
+        self.writeback_bytes = 0.0     # dirty bytes queued for async flush
+        self.clean_drops = 0           # clean victims dropped (PFS had them)
+        self.bytes_clean_dropped = 0.0
+        self.coord_drops = 0           # replicated victims dropped, not moved
+        self.bytes_coord_dropped = 0.0
+        self.coordination_violations = 0   # a drop would have lost data (never)
 
     # ------------------------------------------------------------ placement
     def _default_placement(self, name: str) -> Placement:
@@ -377,6 +542,35 @@ class LocStore:
         self._clock += 1
         self._last_access.setdefault((node, tier), {})[name] = self._clock
 
+    # ------------------------------------------------------- dirty tracking
+    def is_dirty(self, name: str, node: int | None = None) -> bool:
+        """True if ``name`` (or specifically its replica on ``node``) lacks a
+        durable PFS copy of the current version."""
+        with self._lock:
+            if name not in self._dirty:
+                return False
+            if node is None:
+                return True
+            return node in self._residency.get(name, {})
+
+    def write_mode(self, name: str) -> str:
+        """Effective write policy of one object ("through"/"back"/"around")."""
+        return self._mode.get(name, self.write_policy)
+
+    # --------------------------------------------------------------- victims
+    def _replicas_elsewhere(self, name: str,
+                            node: int, tier: str) -> list[tuple[int, str]]:
+        """Other replicas of ``name`` beyond the one at (node, tier), per the
+        LocationService — the cluster-wide view coordinated eviction ranks
+        victims by. Falls back to the residency map if the service has no
+        record (mid-update)."""
+        p = self.loc.lookup(name)
+        if p is not None and p.tiers is not None:
+            pairs = list(zip(p.nodes, p.tiers))
+        else:
+            pairs = list(self._residency.get(name, {}).items())
+        return [(n, t) for n, t in pairs if not (n == node and t == tier)]
+
     def _victim(self, node: int, tier: str, protect: str) -> str | None:
         recency = self._last_access.get((node, tier), {})
         candidates = [n for n in recency if n != protect]
@@ -386,10 +580,50 @@ class LocStore:
             # cost-aware: large, stale objects go first — freeing the most
             # capacity for the least loss of hot data (GreedyDual-Size-ish;
             # with equal sizes it degrades to plain LRU).
-            return max(candidates,
-                       key=lambda n: self._sizes.get(n, 0.0)
-                       * (self._clock - recency[n] + 1))
-        return min(candidates, key=lambda n: recency[n])
+            base = lambda n: -(self._sizes.get(n, 0.0)          # noqa: E731
+                               * (self._clock - recency[n] + 1))
+        else:
+            base = lambda n: recency[n]                         # noqa: E731
+        if not self.coordinated_eviction:
+            return min(candidates, key=base)
+
+        # Cluster-coordinated: consult the LocationService and evict
+        # replicated objects before sole copies. Class 0: another replica in
+        # an equal-or-faster tier exists somewhere (this copy is fully
+        # redundant). Class 1: only colder duplicates elsewhere (this is the
+        # last fast-tier copy — evicting it is still free, but the dataset
+        # goes cold). Class 2: sole copy — demoting it moves real bytes.
+        my_rank = self.hierarchy.rank(tier)
+
+        def klass(n: str) -> int:
+            others = self._replicas_elsewhere(n, node, tier)
+            if not others:
+                return 2
+            if any(self.hierarchy.rank(t) <= my_rank for _, t in others):
+                return 0
+            return 1
+
+        return min(candidates, key=lambda n: (klass(n), base(n)))
+
+    def _evict(self, victim: str, node: int, tier: str,
+               hops: list[TierHop] | None) -> None:
+        """Evict one replica: coordinated mode drops replicas that are
+        duplicated elsewhere (free — a copy survives), everything else is
+        demoted down-tier. Sole copies are NEVER dropped."""
+        if self.coordinated_eviction:
+            others = self._replicas_elsewhere(victim, node, tier)
+            # belt and braces: only drop when the residency map agrees a
+            # duplicate survives — the LocationService can lag mid-update
+            live = [n for n, t in self._residency.get(victim, {}).items()
+                    if not (n == node and t == tier)]
+            if others and live:
+                self._drop_replica(victim, node, tier)
+                self.coord_drops += 1
+                self.bytes_coord_dropped += self._sizes.get(victim, 0.0)
+                return
+            if others and not live:
+                self.coordination_violations += 1   # lagging metadata — demote
+        self._demote(victim, node, tier, hops)
 
     def _drop_replica(self, name: str, node: int, tier: str) -> None:
         res = self._residency.get(name)
@@ -401,32 +635,65 @@ class LocStore:
                                - self._sizes.get(name, 0.0), 0.0)
         self._last_access.get(key, {}).pop(name, None)
 
+    def _record_pfs_write(self, name: str, node: int, src_tier: str,
+                          nbytes: float, kind: str,
+                          hops: list[TierHop] | None, *,
+                          read_src_tier: bool = False) -> None:
+        """The one place PFS-bound writes hit the ledger AND the scalars —
+        a hand-copied variant of this block is how the PR 2 spill-accounting
+        mismatch happened. ``read_src_tier`` adds the media time of reading
+        the evicted tier (a spill of data that never resided there, e.g. a
+        put overflow, pays only the PFS write). Caller holds the lock."""
+        est = self.hierarchy.media_seconds(nbytes, "remote")
+        if read_src_tier:
+            est += self.hierarchy.media_seconds(nbytes, src_tier)
+        hop = TierHop(node, src_tier, REMOTE_TIER, "remote", nbytes, est)
+        if hops is not None:
+            hops.append(hop)
+        self.bytes_moved += nbytes
+        self.remote_bytes += nbytes
+        self.transfers.append(Transfer(
+            name, nbytes, node, REMOTE_TIER, src_tier=src_tier,
+            dst_tier="remote", est_seconds=est, kind=kind, hops=(hop,)))
+
     def _admit(self, name: str, node: int, tier: str,
                hops: list[TierHop] | None = None, *,
-               spill: bool = False) -> str:
-        """Place ``name``'s replica at (node, tier), demoting victims to fit.
+               spill: bool = False, record_spill: bool = False,
+               origin_tier: str | None = None) -> str:
+        """Place ``name``'s replica at (node, tier), evicting victims to fit.
 
         Returns the tier the object actually landed in (an object larger than
         every node tier cascades straight down to the remote PFS). Caller
         holds the lock. Demotion hops are appended to ``hops`` and recorded as
         ``kind="demote"`` transfers. ``spill=True`` means landing on the
         remote tier is capacity-forced data movement (counted in
-        ``bytes_moved``/``remote_bytes``), not a caller-pinned PFS placement.
+        ``bytes_moved``/``remote_bytes``), not a caller-pinned PFS placement;
+        ``record_spill=True`` additionally logs that crossing as a
+        ``kind="spill"`` Transfer (``_demote`` records its own transfer, so it
+        passes False). A synchronous landing on the PFS makes the durable
+        copy current, clearing the object's dirty bit.
         """
         nbytes = self._sizes.get(name, 0.0)
         if node == REMOTE_TIER or not self.hierarchy.is_node_tier(tier):
             res = self._residency.setdefault(name, {})
             if spill and REMOTE_TIER not in res:
-                self.bytes_moved += nbytes
-                self.remote_bytes += nbytes
+                if record_spill and node != REMOTE_TIER:
+                    self._record_pfs_write(
+                        name, node, origin_tier or self.hierarchy.top,
+                        nbytes, "spill", hops)
+                else:       # _demote records its own transfer for this spill
+                    self.bytes_moved += nbytes
+                    self.remote_bytes += nbytes
             res[REMOTE_TIER] = "remote"
+            self._dirty.discard(name)          # PFS now holds this version
             return "remote"
         cap = self.hierarchy.capacity(tier)
         if nbytes > cap:                       # cannot ever fit: skip down
             down = self.hierarchy.next_down(tier)
             return self._admit(name, node,
                                down if down is not None else "remote", hops,
-                               spill=spill)
+                               spill=spill, record_spill=record_spill,
+                               origin_tier=origin_tier or tier)
         res = self._residency.setdefault(name, {})
         old = res.get(node)
         if old == tier:
@@ -438,20 +705,41 @@ class LocStore:
         self._usage[key] = self._usage.get(key, 0.0) + nbytes
         res[node] = tier
         self._touch(name, node, tier)
-        # cascade-demote until this tier fits again
+        # cascade-evict until this tier fits again
         while self._usage.get(key, 0.0) > cap:
             victim = self._victim(node, tier, protect=name)
             if victim is None:
                 break
-            self._demote(victim, node, tier, hops)
+            self._evict(victim, node, tier, hops)
             self._sync_placement(victim)
         return tier
 
     def _demote(self, name: str, node: int, tier: str,
                 hops: list[TierHop] | None = None) -> None:
-        """Move one replica a tier down (to the remote PFS past the bottom)."""
+        """Move one replica a tier down (to the remote PFS past the bottom).
+
+        Past the bottom node tier the object's write policy decides the spill:
+        write-through moves the bytes synchronously; write-back drops clean
+        victims for free (the PFS already holds them) and enqueues dirty ones
+        on the :class:`WriteBackQueue` for an asynchronous flush.
+        """
         nbytes = self._sizes.get(name, 0.0)
         down = self.hierarchy.next_down(tier)
+        while down is not None and nbytes > self.hierarchy.capacity(down):
+            down = self.hierarchy.next_down(down)
+        if down is None:                       # next stop: the parallel FS
+            if (REMOTE_TIER in self._residency.get(name, {})
+                    and name not in self._dirty):
+                # the PFS already holds this exact version — eviction is a
+                # free drop, not a second write (both policies agree; this is
+                # the ledger/scalar mismatch the PR 2 review flagged)
+                self._drop_replica(name, node, tier)
+                self.clean_drops += 1
+                self.bytes_clean_dropped += nbytes
+                return
+            if self.write_mode(name) == "back":
+                self._writeback_evict(name, node, tier, nbytes, hops)
+                return
         self._drop_replica(name, node, tier)
         landed = self._admit(name, node,
                              down if down is not None else "remote", hops,
@@ -471,6 +759,60 @@ class LocStore:
             name, nbytes, node, dst_node, src_tier=tier, dst_tier=dst_tier,
             est_seconds=est, kind="demote", hops=(hop,)))
 
+    def _writeback_evict(self, name: str, node: int, tier: str,
+                         nbytes: float, hops: list[TierHop] | None) -> None:
+        """Evict a dirty replica past the bottom node tier, write-back style:
+        record the (logical) move to the remote tier now, enqueue the flush;
+        the bytes cross the network when the runtime drains the queue, off
+        the critical path. Caller holds the lock (clean replicas were already
+        dropped for free by ``_demote``)."""
+        self._drop_replica(name, node, tier)
+        res = self._residency.setdefault(name, {})
+        res[REMOTE_TIER] = "remote"
+        if self.writeback.has(name):           # flush of this version pending
+            return
+        self._record_pfs_write(name, node, tier, nbytes, "writeback", hops,
+                               read_src_tier=True)
+        self.bytes_demoted += nbytes
+        self.demotions += 1
+        self.writebacks += 1
+        self.writeback_bytes += nbytes
+        self.writeback.push(name, node, tier, nbytes,
+                            self.transfers[-1].est_seconds)
+
+    def drain_writebacks(self, max_entries: int | None = None
+                         ) -> list[WriteBackEntry]:
+        """Flush pending asynchronous PFS writes, FIFO.
+
+        The runtime calls this off the critical path (simulator: when it
+        charges the background NIC lane; executor: drainer thread). Each
+        drained entry makes the PFS copy durable, clearing the object's dirty
+        bit. Entries whose object was deleted meanwhile are skipped (their
+        enqueue-time accounting stands — the modelled bytes were in flight).
+        """
+        out: list[WriteBackEntry] = []
+        consumed = 0
+        while max_entries is None or consumed < max_entries:
+            # pop under the store lock: put()/delete() cancel stale entries
+            # while holding it, so an overwrite can never slip between the
+            # pop and the dirty-bit clear and get its NEW version marked
+            # durable on the strength of the OLD version's flush
+            with self._lock:
+                popped = self.writeback.pop()
+                if popped is None:
+                    break
+                consumed += 1
+                entry, live = popped
+                if not live:            # tombstone: consume the slot only
+                    continue
+                if entry.name in self._values:
+                    self._dirty.discard(entry.name)
+                    res = self._residency.setdefault(entry.name, {})
+                    res[REMOTE_TIER] = "remote"
+                    self._sync_placement(entry.name)
+            out.append(entry)
+        return out
+
     def _sync_placement(self, name: str) -> None:
         """Re-record the LocationService entry from the residency map."""
         res = self._residency.get(name)
@@ -486,15 +828,30 @@ class LocStore:
     # ------------------------------------------------------------------ api
     def put(self, name: str, value: Any, *, loc: Any | None = None,
             tier: str | None = None,
-            xattr: Mapping[str, Any] | None = None) -> Placement:
+            xattr: Mapping[str, Any] | None = None,
+            mode: str | None = None) -> Placement:
         """Create an object; ``loc`` is the paper's ``S_LOC`` pinned placement.
 
         ``tier`` pins the starting tier on every node of the placement
         (default: the hierarchy's top tier — fresh output lands in the fastest
-        memory and capacity pressure demotes it from there).
+        memory and capacity pressure demotes it from there). ``mode``
+        overrides the store's write policy for this object: ``"around"``
+        streams it straight to the PFS (run-once output — it never occupies
+        node tiers and reads are never cached).
         """
+        if mode is not None and mode not in WRITE_POLICIES:
+            raise ValueError(f"unknown write mode {mode!r}")
+        eff_mode = mode or self.write_policy
         placement = (self._norm_loc(loc) if loc is not None
                      else self._default_placement(name))
+        if eff_mode == "around" and (tier is not None
+                                     or len(placement.nodes) > 1):
+            # the object will live on the PFS only — a tier pin or a
+            # multi-node placement contradicts the mode; reject rather than
+            # silently drop the caller's pins
+            raise ValueError("mode='around' streams to the PFS: it cannot "
+                             "honor a tier= pin or a multi-node placement "
+                             "(loc names the single producer node)")
         for n in placement.nodes:
             if n != REMOTE_TIER and not (0 <= n < self.n_nodes):
                 raise ValueError(f"node {n} out of range for {self.n_nodes} nodes")
@@ -508,13 +865,34 @@ class LocStore:
                 for n, t in list(self._residency[name].items()):
                     self._drop_replica(name, n, t)
                 self._residency.pop(name, None)
+                self._dirty.discard(name)
+                self.writeback.cancel(name)  # stale version: never flush it
             self._values[name] = value
-            self._sizes[name] = sizeof(value)
-            for n in placement.nodes:
-                # an explicit PFS placement is where the data starts, not a
-                # movement; a node placement that cascades to the PFS is
-                self._admit(name, n, "remote" if n == REMOTE_TIER else want,
-                            spill=n != REMOTE_TIER)
+            nbytes = sizeof(value)
+            self._sizes[name] = nbytes
+            self._mode[name] = eff_mode
+            if eff_mode == "around":
+                # streaming output: written straight past the node tiers to
+                # the PFS. A node placement names the producer, so the bytes
+                # cross the network now; a PFS placement is the data's origin.
+                src = placement.nodes[0]
+                res = self._residency.setdefault(name, {})
+                res[REMOTE_TIER] = "remote"
+                if src != REMOTE_TIER:
+                    self._record_pfs_write(name, src, self.hierarchy.top,
+                                           nbytes, "writearound", None)
+            else:
+                for n in placement.nodes:
+                    # an explicit PFS placement is where the data starts, not
+                    # a movement; a node placement that cascades to the PFS is
+                    self._admit(name, n,
+                                "remote" if n == REMOTE_TIER else want,
+                                spill=n != REMOTE_TIER, record_spill=True,
+                                origin_tier=want)
+            if REMOTE_TIER in self._residency[name]:
+                self._dirty.discard(name)    # the PFS holds this version
+            else:
+                self._dirty.add(name)        # fresh data, no durable PFS copy
             nodes = tuple(self._residency[name].keys())
             tiers = tuple(self._residency[name].values())
         final = Placement(nodes=nodes, tier=tiers[0], tiers=tiers,
@@ -653,29 +1031,45 @@ class LocStore:
             want = self.hierarchy.normalize(new.tier)
             for n in new.nodes:
                 self._admit(name, n, "remote" if n == REMOTE_TIER else want,
-                            spill=n != REMOTE_TIER)
+                            spill=n != REMOTE_TIER, record_spill=True,
+                            origin_tier=want)
+            if REMOTE_TIER in self._residency[name]:
+                self._dirty.discard(name)
+            elif name in self._values:
+                # the re-pin dropped the PFS replica: no durable copy anymore
+                # (a pending flush, if any, will restore one when drained)
+                self._dirty.add(name)
             nodes = tuple(self._residency[name].keys())
             tiers = tuple(self._residency[name].values())
         final = Placement(nodes=nodes, tier=tiers[0], tiers=tiers,
                           xattr=new.xattr)
         self.loc.record(name, final)
-        return Transfer(name, nbytes, src, final.real_loc,
-                        src_tier=p.tier, dst_tier=final.tier, kind="fetch")
+        tr = Transfer(name, nbytes, src, final.real_loc,
+                      src_tier=p.tier, dst_tier=final.tier, kind="migrate")
+        if not set(final.nodes) & set(p.nodes):
+            with self._lock:
+                self.transfers.append(tr)      # the copy the re-pin implies
+        return tr
 
     def replicate(self, name: str, extra_nodes: Iterable[int],
                   tier: str | None = None) -> Placement:
         """Add replicas (used by the prefetch engine: the original stays).
 
         ``tier`` targets a tier on the new nodes (default: top — a prefetch
-        is supposed to land the data in the fastest memory).
+        is supposed to land the data in the fastest memory). Write-around
+        objects are read exactly once: replicating them is a no-op — their
+        only home is the PFS.
         """
         self.stat(name)                       # raises KeyError if unknown
+        if self.write_mode(name) == "around":
+            return self.stat(name)
         want = self.hierarchy.normalize(tier)
         with self._lock:
             for n in extra_nodes:
                 self._admit(name, int(n),
                             "remote" if int(n) == REMOTE_TIER else want,
-                            spill=int(n) != REMOTE_TIER)
+                            spill=int(n) != REMOTE_TIER, record_spill=True,
+                            origin_tier=want)
             self._sync_placement(name)
         return self.stat(name)
 
@@ -686,6 +1080,9 @@ class LocStore:
                 self._drop_replica(name, n, t)
             self._residency.pop(name, None)
             self._sizes.pop(name, None)
+            self._dirty.discard(name)
+            self._mode.pop(name, None)
+            self.writeback.cancel(name)
         self.loc.drop(name)
 
     def forget_replica(self, name: str, node: int) -> None:
@@ -717,6 +1114,13 @@ class LocStore:
             "promotions": float(self.promotions),
             "migrations": float(self.migrations),
             "transfers": float(len(self.transfers)),
+            "writebacks": float(self.writebacks),
+            "writeback_bytes": self.writeback_bytes,
+            "writeback_pending": float(len(self.writeback)),
+            "clean_drops": float(self.clean_drops),
+            "bytes_clean_dropped": self.bytes_clean_dropped,
+            "coord_drops": float(self.coord_drops),
+            "bytes_coord_dropped": self.bytes_coord_dropped,
         }
 
     def tier_report(self) -> Mapping[str, Mapping[str, float]]:
@@ -747,3 +1151,9 @@ class LocStore:
             self.promotions = 0
             self.migrations = 0
             self.tier_reads.clear()
+            self.writebacks = 0
+            self.writeback_bytes = 0.0
+            self.clean_drops = 0
+            self.bytes_clean_dropped = 0.0
+            self.coord_drops = 0
+            self.bytes_coord_dropped = 0.0

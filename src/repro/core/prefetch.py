@@ -46,6 +46,7 @@ class PrefetchEngine:
         self._lock = threading.Lock()
         self.submitted = 0
         self.completed = 0
+        self.skipped_read_once = 0
         self.bytes_prefetched = 0.0
 
     # ------------------------------------------------------------------ api
@@ -64,6 +65,14 @@ class PrefetchEngine:
 
     def _stage(self, name: str, dst: int, tier: str) -> Any:
         value, tr = self.store.get(name)  # metadata read, no accounting
+        mode_of = getattr(self.store, "write_mode", None)
+        if mode_of is not None and mode_of(name) == "around":
+            # write-around objects are read exactly once: caching a replica
+            # ahead of time would waste the tier the mode exists to protect
+            with self._lock:
+                self.completed += 1
+                self.skipped_read_once += 1
+            return value
         if tier == "hbm" and self.device_of is not None:
             try:
                 import jax
@@ -109,4 +118,5 @@ class PrefetchEngine:
     def report(self) -> dict[str, float]:
         return {"submitted": float(self.submitted),
                 "completed": float(self.completed),
+                "skipped_read_once": float(self.skipped_read_once),
                 "bytes_prefetched": self.bytes_prefetched}

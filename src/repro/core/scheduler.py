@@ -49,6 +49,11 @@ class ClusterView(Protocol):
         """Name of the fastest node-local tier (where fetches land). Views
         may omit this; the cost model assumes "hbm"."""
         ...
+    def bulk_tier(self) -> str:
+        """Name of the slowest (largest) node-local tier — where bulk
+        prefetches stage. Views may omit this; tier pinning assumes "bb"
+        (a hierarchy without one normalizes it to its top tier)."""
+        ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -245,7 +250,9 @@ class ProactiveScheduler(LocalityScheduler):
     It (1) picks a tentative node per task using *estimated* movement costs
     (unknown inputs assumed to appear where their producer runs), (2) records
     the pre-assignment, and (3) returns the prefetch requests for every
-    already-materialized input that is not resident on the target.
+    already-materialized input that is not resident on the target — each
+    pinned to a storage tier chosen from the compiler's ``est_stage_seconds``
+    (hot inputs -> the top tier, bulk -> the burst buffer; see ``_pin_tier``).
 
     ``select`` then honours pre-assignments when the node is still free —
     by construction its inputs are (being) pipelined there.
@@ -253,13 +260,42 @@ class ProactiveScheduler(LocalityScheduler):
 
     def __init__(self, wf: CompiledWorkflow, *, speed_aware: bool = False,
                  min_inputs_ready: int = 1, horizon: int = 64,
-                 prefetch_tier: str = "hbm") -> None:
+                 prefetch_tier: str = "auto",
+                 bulk_stage_ratio: float = 1.0) -> None:
         super().__init__(wf, speed_aware=speed_aware)
         self.min_inputs_ready = min_inputs_ready
         self.horizon = horizon
+        # "auto" = tier pinning from the compiler's est_stage_seconds (hot
+        # inputs -> the top tier, bulk -> the burst buffer); a tier name pins
+        # every prefetch to that tier (the pre-PR3 behaviour).
         self.prefetch_tier = prefetch_tier
+        self.bulk_stage_ratio = bulk_stage_ratio
         self.preassignment: dict[str, int] = {}
         self._prefetched: set[tuple[str, int]] = set()
+
+    def _pin_tier(self, name: str, tid: str, cluster: ClusterView) -> str:
+        """The storage tier a prefetch of ``name`` for ``tid`` should land in.
+
+        Feeds the compiler's stage estimates back into placement: an input
+        whose PFS stage-in time is hideable within its consumer's compute
+        time is *hot* — pin it to the fastest tier so the task reads it at
+        HBM speed. An input whose staging dominates the consumer (bulk) would
+        squat scarce fast memory for longer than it helps — stage it into the
+        burst buffer instead (a flat store normalizes that to its only tier).
+        """
+        if self.prefetch_tier != "auto":
+            return self.prefetch_tier
+        top = getattr(cluster, "top_tier", lambda: "hbm")()
+        stage = self.wf.stage_seconds.get(name)
+        if stage is None:
+            # internal dataset: produced on a node, cheap to pin fast
+            return top
+        # per-dataset: THIS input's staging time vs its consumer's compute
+        # (a task with nine hot inputs and one bulk one pins nine fast)
+        compute = self.wf.est_seconds.get(tid, 0.0)
+        if stage > self.bulk_stage_ratio * compute:
+            return getattr(cluster, "bulk_tier", lambda: "bb")()
+        return top
 
     # -- proactive pass --------------------------------------------------------
     def preplace(self, candidates: Iterable[str], cluster: ClusterView,
@@ -293,7 +329,7 @@ class ProactiveScheduler(LocalityScheduler):
                         reqs.append(PrefetchRequest(
                             data_name=name, dst=node, for_task=tid,
                             est_bytes=self.wf.sizes.get(name, 0.0),
-                            tier=self.prefetch_tier))
+                            tier=self._pin_tier(name, tid, cluster)))
         return reqs
 
     # -- ready-task pass --------------------------------------------------------

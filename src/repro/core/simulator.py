@@ -50,6 +50,10 @@ class SimResult:
     bytes_demoted: float = 0.0    # capacity-pressure eviction traffic
     demotions: int = 0
     promotions: int = 0
+    writebacks: int = 0           # async dirty flushes to the PFS
+    writeback_bytes: float = 0.0
+    clean_drops: int = 0          # free evictions (PFS already had the copy)
+    coord_drops: int = 0          # free evictions (duplicate elsewhere)
 
     @property
     def locality_hit_rate(self) -> float:
@@ -70,6 +74,10 @@ class SimResult:
             "bytes_demoted": self.bytes_demoted,
             "demotions": float(self.demotions),
             "promotions": float(self.promotions),
+            "writebacks": float(self.writebacks),
+            "writeback_bytes": self.writeback_bytes,
+            "clean_drops": float(self.clean_drops),
+            "coord_drops": float(self.coord_drops),
         }
 
 
@@ -100,6 +108,9 @@ class SimCluster(ClusterView):
     def top_tier(self) -> str:
         return self.store.hierarchy.top
 
+    def bulk_tier(self) -> str:
+        return self.store.hierarchy.bottom
+
     def worker_speed(self, node: int) -> float:
         return self.speeds.get(node, 1.0)
 
@@ -108,6 +119,7 @@ class SimCluster(ClusterView):
 _TASK_FINISH = 0
 _XFER_DONE = 1
 _FAIL = 2
+_WB_FLUSH = 3
 
 
 class WorkflowSimulator:
@@ -123,12 +135,16 @@ class WorkflowSimulator:
         external_loc: str = "remote",   # "remote" | "scattered"
         proactive: bool | None = None,
         hierarchy: StorageHierarchy | None = None,
+        write_policy: str = "through",
+        coordinated_eviction: bool = False,
     ) -> None:
         self.wf = wf
         self.sched = scheduler
         self.hw = hw
         self.n_nodes = n_nodes
-        self.store = LocStore(n_nodes, hierarchy=hierarchy)
+        self.store = LocStore(n_nodes, hierarchy=hierarchy,
+                              write_policy=write_policy,
+                              coordinated_eviction=coordinated_eviction)
         self.cluster = SimCluster(n_nodes, hw, self.store, speeds)
         self.failures = sorted(failures)
         self.proactive = (isinstance(scheduler, ProactiveScheduler)
@@ -192,19 +208,34 @@ class WorkflowSimulator:
             return start + dur
 
         def drain_eviction_traffic(t0: float) -> None:
-            """Charge capacity-pressure demotions that spilled to the PFS to
-            the evicting node's background NIC channel — eviction write-back
-            competes with prefetch for idle network time."""
+            """Charge PFS-bound eviction traffic to the evicting node's NIC.
+
+            Write-through spills (kind demote/spill) are synchronous — they
+            occupy the DEMAND lane, so the fetches tasks are waiting on queue
+            behind them: that is the critical-path cost async write-back
+            exists to remove. Write-back flushes and write-around streams
+            (kind writeback/writearound) overlap compute on the background
+            lane, competing only with prefetch for idle network time."""
             nonlocal xfer_cursor
             new = self.store.transfers[xfer_cursor:]
             xfer_cursor = len(self.store.transfers)
             for tr in new:
-                if tr.kind != "demote" or tr.dst != REMOTE_TIER:
+                if tr.dst != REMOTE_TIER or not (0 <= tr.src < self.n_nodes):
                     continue
-                if 0 <= tr.src < self.n_nodes:
-                    dur = (self.hw.move_seconds(tr.nbytes, tr.src, REMOTE_TIER)
-                           + tr.est_seconds)
+                dur = (self.hw.move_seconds(tr.nbytes, tr.src, REMOTE_TIER)
+                       + tr.est_seconds)
+                if tr.kind in ("demote", "spill"):
+                    nic_free[tr.src] = max(nic_free[tr.src], t0) + dur
+                elif tr.kind == "writearound":
                     nic_bg_free[tr.src] = max(nic_bg_free[tr.src], t0) + dur
+                elif tr.kind == "writeback":
+                    # the flush becomes durable when the background lane
+                    # finishes it, not at enqueue — the queue is FIFO and
+                    # transfers are scanned in enqueue order, so one
+                    # flush-done event per transfer drains the right entry
+                    end = max(nic_bg_free[tr.src], t0) + dur
+                    nic_bg_free[tr.src] = end
+                    heapq.heappush(events, (end, next(seq), _WB_FLUSH, None))
 
         def start_assignment(a: Assignment, t0: float) -> None:
             nonlocal done
@@ -310,6 +341,8 @@ class WorkflowSimulator:
                 name, dst, dst_tier = payload  # type: ignore[misc]
                 if self.store.exists(name) and dst not in self.cluster.failed:
                     self.store.replicate(name, [dst], tier=dst_tier)
+            elif kind == _WB_FLUSH:
+                self.store.drain_writebacks(max_entries=1)
             elif kind == _FAIL:
                 fail_node(payload, now)  # type: ignore[arg-type]
             schedule_pass(now)
@@ -321,6 +354,7 @@ class WorkflowSimulator:
             missing = [t for t, st in state.items() if st != "done"]
             raise RuntimeError(f"simulation deadlock: {len(missing)} tasks "
                                f"unfinished, e.g. {missing[:5]}")
+        self.store.drain_writebacks()   # flush stragglers (already charged)
         rep = self.store.movement_report()
         return SimResult(
             makespan=now,
@@ -336,6 +370,10 @@ class WorkflowSimulator:
             bytes_demoted=rep["bytes_demoted"],
             demotions=int(rep["demotions"]),
             promotions=int(rep["promotions"]),
+            writebacks=int(rep["writebacks"]),
+            writeback_bytes=rep["writeback_bytes"],
+            clean_drops=int(rep["clean_drops"]),
+            coord_drops=int(rep["coord_drops"]),
         )
 
     def _invalidate(self, tid: str, state: dict, unfinished_preds: dict,

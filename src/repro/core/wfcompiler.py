@@ -122,8 +122,13 @@ class CompiledWorkflow:
     critical_seconds: float
     # task -> est. seconds to stage its still-on-PFS external inputs through
     # the storage hierarchy (remote read + link + top-tier write). The
-    # schedulers use it as a tier-aware tie-breaker; benchmarks report it.
+    # ProactiveScheduler feeds it into preplace to pick the prefetch tier per
+    # dataset (hot inputs -> hbm, bulk -> bb); benchmarks report it.
     est_stage_seconds: dict[str, float] = dataclasses.field(default_factory=dict)
+    # external dataset -> est. seconds to stage IT alone into fast memory —
+    # the per-dataset term est_stage_seconds sums; the scheduler compares it
+    # against the consumer's compute time to classify hot vs bulk inputs.
+    stage_seconds: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def input_bytes(self, tid: str) -> float:
         return sum(self.sizes[n] for n in self.graph.tasks[tid].inputs)
@@ -194,17 +199,18 @@ def compile_workflow(graph: TaskGraph, hw: HardwareModel = TPU_V5E) -> CompiledW
     # bandwidths live in the HardwareModel, so one config covers compiler,
     # schedulers and simulator.)
     external = {d.name for d in graph.external_inputs()}
+    ds_stage = {n: hw.move_seconds_tiered(sizes[n], REMOTE_TIER, 0,
+                                          "remote", "hbm")
+                for n in external}
     stage: dict[str, float] = {}
     for tid in topo:
         t = graph.tasks[tid]
-        stage[tid] = sum(
-            hw.move_seconds_tiered(sizes[n], REMOTE_TIER, 0, "remote", "hbm")
-            for n in t.inputs if n in external)
+        stage[tid] = sum(ds_stage[n] for n in t.inputs if n in external)
 
     return CompiledWorkflow(
         graph=graph, hw=hw, topo=topo, sizes=sizes,
         est_flops=est_flops, est_seconds=est_seconds,
         earliest_start=earliest, upward_rank=rank,
         critical_path=cpath, critical_seconds=cseconds,
-        est_stage_seconds=stage,
+        est_stage_seconds=stage, stage_seconds=ds_stage,
     )

@@ -1,0 +1,64 @@
+"""The --quick CI contract: every benchmark module must accept (and honor)
+the quick flag, and the harness must run every module that exists — a module
+that silently ignores quick reintroduces full-size sweeps into the smoke job
+(PR 3 satellite fix: bench_roofline lacked the parameter entirely).
+"""
+
+import importlib
+import inspect
+import os
+import pkgutil
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+import benchmarks  # noqa: E402
+
+
+def bench_modules():
+    for info in pkgutil.iter_modules(benchmarks.__path__):
+        if info.name.startswith("bench_"):
+            yield importlib.import_module(f"benchmarks.{info.name}")
+
+
+def test_every_bench_module_accepts_quick():
+    mods = list(bench_modules())
+    assert mods, "no benchmark modules found"
+    missing = [m.__name__ for m in mods
+               if "quick" not in inspect.signature(m.run).parameters]
+    assert not missing, (f"benchmark modules ignoring --quick: {missing} — "
+                         f"the CI smoke job would run them at full scale")
+
+
+def test_harness_runs_every_module():
+    """run.py's explicit module list must cover every bench_* file on disk."""
+    import benchmarks.run as harness
+
+    src = inspect.getsource(harness.main)
+    on_disk = {m.__name__.split(".")[-1] for m in bench_modules()}
+    not_wired = {name for name in on_disk if name not in src}
+    assert not not_wired, f"bench modules not wired into run.py: {not_wired}"
+
+
+def test_trend_checker_importable_and_selfchecks():
+    from benchmarks import check_trend
+
+    # token parser: units are stripped, percentages and arrows ignored
+    m = check_trend.parse_metrics(
+        "remote_gib=3.25 io_wait_s=12.5 hit=45% makespan 10->20s x=1e-3")
+    assert m["remote_gib"] == 3.25 and m["io_wait_s"] == 12.5
+    assert "makespan" not in m          # arrow form is not a token
+    # regression logic
+    base = [{"name": "a", "us_per_call": 0.0, "derived": "remote_gib=1.0"}]
+    cur_ok = [{"name": "a", "us_per_call": 0.0, "derived": "remote_gib=1.5"}]
+    cur_bad = [{"name": "a", "us_per_call": 0.0, "derived": "remote_gib=2.5"}]
+    assert check_trend.regressions(cur_ok, base) == []
+    bad = check_trend.regressions(cur_bad, base)
+    assert len(bad) == 1 and bad[0].name == "a"
+    # traffic appearing from a ~zero baseline must still fail the gate
+    base0 = [{"name": "a", "us_per_call": 0.0, "derived": "remote_gib=0.00"}]
+    cur0 = [{"name": "a", "us_per_call": 0.0, "derived": "remote_gib=3.00"}]
+    (r0,) = check_trend.regressions(cur0, base0)
+    assert r0.current == 3.0 and str(r0)      # printable despite inf ratio

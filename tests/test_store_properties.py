@@ -1,0 +1,206 @@
+"""Property-based tests for StorageHierarchy/LocStore (PR 3 satellite).
+
+Under arbitrary put/get/replicate/promote/migrate/drain/delete sequences:
+
+  * no dataset is ever lost (everything put and not deleted stays resolvable),
+  * per-(node, tier) capacity is never exceeded,
+  * `tier_report` byte totals balance against the residency map
+    (conservation invariant), and usage counters agree with residency.
+
+Runs in two modes: a deterministic seeded fuzzer that always executes, and a
+hypothesis-driven variant when the library is installed (the container may
+not ship it — same importorskip guard as test_dag_properties).
+"""
+
+import random
+
+import pytest
+
+from repro.core.locstore import (LocStore, Placement, REMOTE_TIER, SimObject,
+                                 StorageHierarchy, TierSpec)
+
+try:
+    import hypothesis
+    from hypothesis import strategies as hst
+    HAS_HYPOTHESIS = True
+except ImportError:                               # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+N_NODES = 3
+NAMES = [f"d{i}" for i in range(8)]
+TIERS = ("hbm", "host", "bb", None)
+MODES = (None, "through", "back", "around")
+
+
+def small_hierarchy():
+    return StorageHierarchy(
+        [TierSpec("hbm", 100.0, 800e9),
+         TierSpec("host", 200.0, 100e9),
+         TierSpec("bb", 300.0, 8e9)],
+        remote=TierSpec("remote", float("inf"), 2e9))
+
+
+def check_invariants(st: LocStore, live: set[str]) -> None:
+    """The conservation/capacity/balance invariants every op must preserve."""
+    # 1. conservation: nothing put (and not deleted) is ever lost
+    for name in live:
+        assert st.exists(name), f"{name} was lost"
+        assert st._residency.get(name), f"{name} resolvable but replica-free"
+    # 2. residency <-> usage agreement, capacity never exceeded
+    usage: dict[tuple[int, str], float] = {}
+    for name, res in st._residency.items():
+        assert name in st._values and name in st._sizes
+        for node, tier in res.items():
+            if node == REMOTE_TIER:
+                assert tier == "remote"
+                continue
+            assert st.hierarchy.is_node_tier(tier), (name, node, tier)
+            key = (node, tier)
+            usage[key] = usage.get(key, 0.0) + st._sizes[name]
+    for key, used in usage.items():
+        assert st._usage.get(key, 0.0) == pytest.approx(used), key
+        assert used <= st.hierarchy.capacity(key[1]) + 1e-9, (
+            f"capacity exceeded at {key}: {used}")
+    for key, used in st._usage.items():
+        assert used == pytest.approx(usage.get(key, 0.0)), key
+    # 3. tier_report byte totals balance with the residency map
+    rep = st.tier_report()
+    per_tier: dict[str, float] = {}
+    replicas: dict[str, int] = {}
+    for res in st._residency.values():
+        for node, tier in res.items():
+            replicas[tier] = replicas.get(tier, 0) + 1
+    for (node, tier), used in usage.items():
+        per_tier[tier] = per_tier.get(tier, 0.0) + used
+    for tier in st.hierarchy.names():
+        assert rep[tier]["resident_bytes"] == pytest.approx(
+            per_tier.get(tier, 0.0)), tier
+        assert rep[tier]["replicas"] == replicas.get(tier, 0), tier
+    # 4. the location service mirrors residency
+    for name in st.loc.names():
+        p = st.loc.lookup(name)
+        assert p is not None and name in st._residency
+
+
+def apply_op(st: LocStore, op: tuple, live: set[str]) -> None:
+    """One fuzzed store operation (total: never raises for valid sequences)."""
+    kind = op[0]
+    if kind == "put":
+        _, name, size, node, tier, mode = op
+        st.put(name, SimObject(float(size)), loc=node, tier=tier, mode=mode)
+        live.add(name)
+    elif kind == "put_replicated":
+        _, name, size, nodes = op
+        st.put(name, SimObject(float(size)), loc=tuple(nodes))
+        live.add(name)
+    elif kind == "put_pfs":
+        _, name, size = op
+        st.put(name, SimObject(float(size)),
+               loc=Placement((REMOTE_TIER,), tier="remote"))
+        live.add(name)
+    elif kind == "get":
+        _, name, at = op
+        if name in live:
+            st.get(name, at=at)
+    elif kind == "replicate":
+        _, name, node, tier = op
+        if name in live:
+            st.replicate(name, [node], tier=tier)
+    elif kind == "promote":
+        _, name, node, tier = op
+        if name in live and node in st._residency.get(name, {}):
+            st.promote(name, node, tier)
+    elif kind == "migrate":
+        _, name, node = op
+        if name in live:
+            st.migrate(name, node)
+    elif kind == "drain":
+        st.drain_writebacks()
+    elif kind == "delete":
+        _, name = op
+        if name in live:
+            st.delete(name)
+            live.discard(name)
+    elif kind == "forget":
+        _, name, node = op
+        if name in live:
+            res = st._residency.get(name, {})
+            if len(res) > 1 and node in res:   # never forget the last copy
+                st.forget_replica(name, node)
+
+
+def random_op(rng: random.Random) -> tuple:
+    name = rng.choice(NAMES)
+    kind = rng.choices(
+        ["put", "put_replicated", "put_pfs", "get", "replicate", "promote",
+         "migrate", "drain", "delete", "forget"],
+        weights=[30, 6, 4, 25, 10, 6, 5, 6, 4, 4])[0]
+    if kind == "put":
+        mode = rng.choice(MODES)
+        # an around-put cannot carry a tier pin (the store rejects the combo)
+        tier = None if mode == "around" else rng.choice(TIERS)
+        return (kind, name, rng.choice([10, 40, 90, 150, 250, 500]),
+                rng.randrange(N_NODES), tier, mode)
+    if kind == "put_replicated":
+        return (kind, name, rng.choice([10, 40, 90]),
+                rng.sample(range(N_NODES), k=2))
+    if kind == "put_pfs":
+        return (kind, name, rng.choice([10, 90, 500]))
+    if kind == "get":
+        return (kind, name, rng.randrange(N_NODES))
+    if kind in ("replicate", "promote"):
+        return (kind, name, rng.randrange(N_NODES),
+                rng.choice(("hbm", "host", "bb", None)))
+    if kind in ("migrate", "forget"):
+        return (kind, name, rng.randrange(N_NODES))
+    if kind == "delete":
+        return (kind, name)
+    return (kind,)
+
+
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("store_kw", [
+    {},                                             # write-through LRU
+    {"write_policy": "back"},
+    {"write_policy": "back", "coordinated_eviction": True},
+    {"eviction_policy": "cost", "coordinated_eviction": True},
+], ids=["through", "back", "back+coord", "cost+coord"])
+def test_random_sequences_preserve_invariants(seed, store_kw):
+    rng = random.Random(1000 + seed)
+    st = LocStore(N_NODES, hierarchy=small_hierarchy(), **store_kw)
+    live: set[str] = set()
+    for step in range(120):
+        apply_op(st, random_op(rng), live)
+        if step % 10 == 9:
+            check_invariants(st, live)
+    st.drain_writebacks()
+    check_invariants(st, live)
+    # final: every surviving object still readable from every node
+    for name in live:
+        for node in range(N_NODES):
+            value, _ = st.get(name, at=node)
+            assert value is not None
+    check_invariants(st, live)
+
+
+@pytest.mark.skipif(not HAS_HYPOTHESIS, reason="hypothesis not installed")
+def test_hypothesis_sequences_preserve_invariants():
+    op_strategy = hst.builds(
+        random_op, hst.integers(min_value=0, max_value=2**31).map(random.Random))
+
+    @hypothesis.given(
+        ops=hst.lists(op_strategy, min_size=1, max_size=60),
+        policy=hst.sampled_from(["through", "back"]),
+        coord=hst.booleans())
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def inner(ops, policy, coord):
+        st = LocStore(N_NODES, hierarchy=small_hierarchy(),
+                      write_policy=policy, coordinated_eviction=coord)
+        live: set[str] = set()
+        for op in ops:
+            apply_op(st, op, live)
+        check_invariants(st, live)
+        st.drain_writebacks()
+        check_invariants(st, live)
+
+    inner()
