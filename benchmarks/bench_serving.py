@@ -1,6 +1,27 @@
 """E5b — location-aware serving: the router saves one prefill per follow-up
 turn by landing requests on the engine that already holds the session cache
-(compute-on-data-path applied to inference)."""
+(compute-on-data-path applied to inference).
+
+Three measurements:
+
+  (a) **router on/off** (original): follow-ups land on the cache holder vs a
+      random engine that must re-prefill the history.
+
+  (b) **memory-pressure sweep** (PR 4 tentpole): more sessions than decode
+      slots. *Flat pinning* (the pre-tiered behaviour) can only make room by
+      finishing sessions — their caches are lost and every follow-up to a
+      lost session is a full re-prefill, with "engine full" errors absorbed
+      by force-finishing. *Tiered session routing* parks idle sessions into
+      the burst-buffer tier and re-hydrates them on resume, so follow-ups
+      cost a tier promotion instead of a prefill. In-bench asserts (the PR 4
+      acceptance criteria): tiered saves prefills at every oversubscription
+      point, zero "engine full" errors on tiered follow-ups, and
+      ``store.tier_report()`` accounts the true KV bytes.
+
+  (c) **simulator serving workload**: the same session/KV-chain shape at
+      cluster scale — a locality scheduler keeps each session's KV chain on
+      one node (bytes stay local), FCFS migrates it every turn.
+"""
 
 from __future__ import annotations
 
@@ -11,7 +32,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke
-from repro.core.locstore import LocStore
+from repro.core import FCFSScheduler, HPC_CLUSTER, LocalityScheduler, \
+    compile_workflow
+from repro.core.locstore import GiB, LocStore, tiered_hierarchy
+from repro.core.simulator import WorkflowSimulator
+from repro.core.workloads import serving_session_workflow
 from repro.models import init_params
 from repro.serve.engine import Router, ServingEngine
 
@@ -21,6 +46,7 @@ def run(report, quick: bool = False) -> None:
     params = init_params(cfg, jax.random.PRNGKey(0))
     n_engines, n_sessions, n_turns = (2, 2, 2) if quick else (2, 4, 3)
 
+    # ------------------------------------------------- (a) router on/off
     def turns(router_on: bool):
         rng = np.random.default_rng(42)
         store = LocStore(n_engines)
@@ -63,3 +89,135 @@ def run(report, quick: bool = False) -> None:
     report("serving/location_router", t_on * 1e6,
            f"prefills={prefills_on} (saved "
            f"{prefills_off - prefills_on}) hits={router.locality_hits}")
+
+    # --------------------------------------- (b) memory-pressure sweep
+    max_batch, max_seq = 2, 64
+    slots = n_engines * max_batch
+    rounds = 2 if quick else 3
+    factors = (1.5, 2.0) if quick else (1.5, 2.0, 3.0)
+
+    def pressure_run(n_sess: int, tiered: bool):
+        """Returns (prefills, engine_full_errors, router, store, engines)."""
+        rng = np.random.default_rng(7)
+        if tiered:
+            probe = ServingEngine(cfg, params, max_batch=max_batch,
+                                  max_seq=max_seq)
+            kv = probe.slot_bytes()
+            store = LocStore(n_engines, hierarchy=tiered_hierarchy(
+                hbm_bytes=max_batch * kv, host_bytes=max_batch * kv,
+                bb_bytes=4 * GiB), write_policy="back")
+        else:
+            store = LocStore(n_engines)
+        engines = [ServingEngine(cfg, params, max_batch=max_batch,
+                                 max_seq=max_seq, node=i, store=store)
+                   for i in range(n_engines)]
+        rtr = Router(engines, store, allow_park=tiered)
+        errors = 0
+        # sid -> (engine, history); dead sessions keep their history so a
+        # follow-up can re-prefill (the flat-pinning cost being measured)
+        book: dict[int, tuple[ServingEngine, list[int]]] = {}
+        order: list[int] = []
+
+        def force_finish_lru() -> None:
+            # flat pinning's only escape valve: finish the oldest live
+            # session somewhere, discarding its cache
+            for old in order:
+                if old not in book:     # the session being routed right now
+                    continue
+                eng, _ = book[old]
+                s = eng.sessions.get(old)
+                if s is not None and not s.done:
+                    eng.finish(old)
+                    return
+
+        def admit(prompt: list[int]) -> tuple[ServingEngine, int]:
+            nonlocal errors
+            while True:
+                try:
+                    eng = rtr.engine_for()
+                    return eng, eng.submit(prompt)
+                except RuntimeError:            # "all engines full"
+                    errors += 1
+                    force_finish_lru()
+
+        for _ in range(n_sess):
+            prompt = rng.integers(0, cfg.vocab, 8).tolist()
+            eng, sid = admit(prompt)
+            book[sid] = (eng, list(eng.sessions[sid].tokens))
+            order.append(sid)
+        for _ in range(rounds):
+            for i, sid in enumerate(list(order)):
+                eng, hist = book.pop(sid)
+                sess = eng.sessions.get(sid)
+                if tiered:
+                    try:
+                        eng, sid2 = rtr.follow_up(sid, hist[-8:])
+                    except RuntimeError:
+                        errors += 1
+                        continue
+                else:
+                    if sess is not None and not sess.done:
+                        eng = rtr.engine_for(sid)   # locality hit: continue
+                        sid2 = sid
+                    else:                           # cache lost: re-prefill
+                        eng, sid2 = admit(hist[-8:])
+                eng.step()
+                book[sid2] = (eng, list(eng.sessions[sid2].tokens))
+                order[i] = sid2
+            if tiered:
+                store.drain_writebacks()            # background flusher tick
+        prefills = sum(e.prefills for e in engines)
+        return prefills, errors, rtr, store, engines
+
+    for factor in factors:
+        n_sess = int(slots * factor)
+        t0 = time.perf_counter()
+        flat_prefills, flat_errors, _, _, _ = pressure_run(n_sess, False)
+        t_flat = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        prefills, tier_errors, rtr, store, engines = pressure_run(n_sess, True)
+        t_tier = time.perf_counter() - t0
+        kv = engines[0].slot_bytes()
+        rep = store.tier_report()
+        resident = sum(t["resident_bytes"] for t in rep.values())
+        live = sum(1 for e in engines for s in e.sessions.values()
+                   if not s.done)
+        # the true KV bytes are visible to capacity accounting (the zero-byte
+        # registration bug this PR fixes would make this 0)
+        assert resident >= live * kv * 0.99, \
+            f"tier_report misses KV bytes: {resident} < {live}*{kv}"
+        assert tier_errors == 0, \
+            f"tiered routing hit 'engine full' {tier_errors}x at x{factor}"
+        assert prefills < flat_prefills, (
+            f"tiered routing saved no prefills at x{factor}: "
+            f"{prefills} !< {flat_prefills}")
+        mr = store.movement_report()
+        report(f"serving/pressure/x{factor}/flat", t_flat * 1e6,
+               f"prefills={flat_prefills} engine_full_errors={flat_errors}")
+        report(f"serving/pressure/x{factor}/tiered", t_tier * 1e6,
+               f"prefills={prefills} (saved {flat_prefills - prefills}) "
+               f"engine_full_errors={tier_errors} "
+               f"parks={sum(e.parks for e in engines)} "
+               f"resumes={sum(e.resumes for e in engines)} "
+               f"evictions={rtr.locality_evictions} "
+               f"writebacks={int(mr['writebacks'])} "
+               f"hbm_gib={rep['hbm']['resident_bytes']/GiB:.4f} "
+               f"bb_gib={rep['bb']['resident_bytes']/GiB:.4f}")
+
+    # ------------------------------- (c) simulator serving workload
+    n_s, n_t = (10, 3) if quick else (16, 4)
+    wf = compile_workflow(serving_session_workflow(n_s, n_t), HPC_CLUSTER)
+    r_fcfs = WorkflowSimulator(wf, FCFSScheduler(wf), n_nodes=4,
+                               hw=HPC_CLUSTER).run()
+    wf2 = compile_workflow(serving_session_workflow(n_s, n_t), HPC_CLUSTER)
+    r_loc = WorkflowSimulator(wf2, LocalityScheduler(wf2), n_nodes=4,
+                              hw=HPC_CLUSTER).run()
+    report("serving/sim/fcfs", 0.0,
+           f"kv_moved_gib={r_fcfs.bytes_moved/GiB:.2f} "
+           f"hit={r_fcfs.locality_hit_rate:.0%}")
+    report("serving/sim/locality", 0.0,
+           f"kv_moved_gib={r_loc.bytes_moved/GiB:.2f} "
+           f"hit={r_loc.locality_hit_rate:.0%} "
+           f"vs_fcfs={r_loc.bytes_moved / max(r_fcfs.bytes_moved, 1.0):.2f}x")
+    assert r_loc.bytes_moved <= r_fcfs.bytes_moved, \
+        "locality scheduling moved MORE KV bytes than FCFS"

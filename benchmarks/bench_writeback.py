@@ -76,17 +76,29 @@ def run(report, quick: bool = False) -> None:
             assert r.tasks_done == len(wf.graph.tasks)
             for name in sim.store.loc.names():
                 assert sim.store.exists(name)
+            # prefetch pins released cleanly, and none of the replicas they
+            # protected was evicted out from under a pending consumer (the
+            # "coordinated eviction undoes prefetch at comfortable capacity"
+            # ROADMAP bug, worst at the 1 GiB point)
+            assert sim.store.movement_report()["pins"] == 0
             report(f"writeback/sweep/cap{cap_gb}g/{label}", 0.0,
                    f"io_wait_s={r.io_wait_total:.1f} "
                    f"remote_gib={r.remote_bytes/GB:.2f} "
                    f"makespan_s={r.makespan:.1f} writebacks={r.writebacks} "
-                   f"clean_drops={r.clean_drops} coord_drops={r.coord_drops}")
+                   f"clean_drops={r.clean_drops} coord_drops={r.coord_drops} "
+                   f"pin_protected={r.pin_protected_evictions}")
         if cap_gb in tight:
             thru, back = results["through"], results["back"]
             assert back.writebacks > 0, f"no write-backs at cap={cap_gb}g"
             assert back.io_wait_total < thru.io_wait_total, (
                 f"write-back did not cut io-wait at cap={cap_gb}g: "
                 f"{back.io_wait_total:.1f} !< {thru.io_wait_total:.1f}")
+        if cap_gb >= 1.0:
+            # comfortable capacity: the do-not-evict pins must actually have
+            # defended prefetched replicas from the eviction scans here —
+            # this is the point where PR 3's coordination undid prefetch work
+            assert results["back_coord"].pin_protected_evictions > 0, (
+                f"pins never shielded a prefetched replica at cap={cap_gb}g")
 
     # (b) store-level reuse trace: flushed-once, re-evicted free. The node
     # tiers hold ~60% of the working set, so the cyclic reuse keeps cycling

@@ -15,8 +15,18 @@ Usage (the CI --quick job runs it right after ``run.py --quick``)::
   of the paper's data-movement argument (remote-PFS bytes, critical-path I/O
   wait). Rows absent from either side, non-token formats, and near-zero
   baselines (< EPS, where timing noise dominates) are skipped.
+* **Per-row allow-list**: a deliberate regression can be waived for exactly
+  one (row, metric) pair — either ``--allow 'row/name:metric'`` on the
+  command line or an entry in ``benchmarks/trend_allowlist.json``::
 
-Exit code 1 lists every regression; 0 otherwise.
+      [{"name": "writeback/sweep/cap1.0g/back_coord", "metric": "remote_gib",
+        "reason": "pins keep prefetched dups on-node; remote shifts to ..."}]
+
+  Waived regressions are printed (with their reason) but do not fail the
+  gate. The ``reason`` field is mandatory in the file — an allow-list entry
+  nobody can explain is a bug magnet.
+
+Exit code 1 lists every non-waived regression; 0 otherwise.
 """
 
 from __future__ import annotations
@@ -68,11 +78,41 @@ def latest_baseline(root: str = ROOT) -> str | None:
     return best
 
 
+def load_allowlist(path: str | None = None) -> set[tuple[str, str]]:
+    """(row name, metric) pairs waived in benchmarks/trend_allowlist.json.
+    Every entry must carry a non-empty ``reason``; a missing file is an
+    empty allow-list."""
+    path = path or os.path.join(ROOT, "benchmarks", "trend_allowlist.json")
+    if not os.path.exists(path):
+        return set()
+    with open(path) as f:
+        entries = json.load(f)
+    out: set[tuple[str, str]] = set()
+    for e in entries:
+        if not e.get("reason", "").strip():
+            raise ValueError(f"allow-list entry {e.get('name')!r}:"
+                             f"{e.get('metric')!r} has no reason")
+        out.add((e["name"], e["metric"]))
+    return out
+
+
 def regressions(current: list[dict], baseline: list[dict],
-                threshold: float = 2.0) -> list[Regression]:
+                threshold: float = 2.0,
+                allowed: set[tuple[str, str]] | None = None,
+                waived: list[Regression] | None = None) -> list[Regression]:
+    """``allowed`` holds (row name, metric) pairs whose regressions are
+    waived — they land in ``waived`` (if given) instead of the result."""
+    allowed = allowed or set()
     base_rows = {r["name"]: parse_metrics(r.get("derived", ""))
                  for r in baseline}
     out: list[Regression] = []
+    def emit(r: Regression) -> None:
+        if (r.name, r.metric) in allowed:
+            if waived is not None:
+                waived.append(r)
+        else:
+            out.append(r)
+
     for row in current:
         base = base_rows.get(row["name"])
         if base is None:
@@ -87,11 +127,10 @@ def regressions(current: list[dict], baseline: list[dict],
                 # a ~zero baseline can't be ratioed, but traffic appearing
                 # from nothing (the PR-2 class of bug) must still fail
                 if cur[key] > 2 * EPS:
-                    out.append(Regression(row["name"], key, base_val,
-                                          cur[key]))
+                    emit(Regression(row["name"], key, base_val, cur[key]))
                 continue
             if cur[key] > threshold * base_val:
-                out.append(Regression(row["name"], key, base_val, cur[key]))
+                emit(Regression(row["name"], key, base_val, cur[key]))
     return out
 
 
@@ -103,7 +142,18 @@ def main() -> int:
                     help="baseline BENCH_<n>.json (default: latest committed)")
     ap.add_argument("--threshold", type=float, default=2.0,
                     help="fail when current > threshold * baseline")
+    ap.add_argument("--allow", action="append", default=[],
+                    metavar="ROW:METRIC",
+                    help="waive one (row, metric) regression; repeatable "
+                         "(also read from benchmarks/trend_allowlist.json)")
     args = ap.parse_args()
+
+    allowed = load_allowlist()
+    for spec in args.allow:
+        name, sep, metric = spec.rpartition(":")
+        if not sep or not name:
+            ap.error(f"--allow wants ROW:METRIC, got {spec!r}")
+        allowed.add((name, metric))
 
     baseline_path = args.baseline or latest_baseline()
     if baseline_path is None:
@@ -118,11 +168,15 @@ def main() -> int:
     with open(baseline_path) as f:
         baseline = json.load(f)
 
-    bad = regressions(current, baseline, args.threshold)
+    waived: list[Regression] = []
+    bad = regressions(current, baseline, args.threshold,
+                      allowed=allowed, waived=waived)
     compared = sum(1 for r in current
                    if r["name"] in {b["name"] for b in baseline})
     print(f"check_trend: {compared} shared rows vs "
           f"{os.path.basename(baseline_path)}, threshold {args.threshold}x")
+    for r in waived:
+        print(f"  waived (allow-list): {r}")
     if bad:
         print(f"FAILED: {len(bad)} perf regression(s):", file=sys.stderr)
         for r in bad:

@@ -182,6 +182,7 @@ class WorkflowExecutor:
                                    xattr={"producer": tid})
             except BaseException as e:  # noqa: BLE001 - propagated below
                 errors.append(e)
+            self.prefetch.release(tid)
             t_end = time.perf_counter()
             with self._cv:
                 self._io_wait += t_start - t_assign
@@ -215,8 +216,11 @@ class WorkflowExecutor:
                                      for n in g.tasks[tid].inputs)]
                         for req in self.sched.preplace(cands, self.cluster,
                                                        dict(self._running_at)):
+                            # pinned do-not-evict until for_task finishes, so
+                            # capacity pressure cannot undo the prefetch
                             self.prefetch.submit(req.data_name, req.dst,
-                                                 tier=req.tier)
+                                                 tier=req.tier,
+                                                 pin_for=req.for_task)
                     if assignments:
                         continue
                 self._cv.wait(timeout=0.5)

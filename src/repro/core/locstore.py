@@ -49,6 +49,13 @@ copies, and a replica that is duplicated anywhere else in the cluster is
 copy to the PFS while node B holds a cold duplicate. Sole copies are always
 demoted down-tier, never dropped.
 
+**Do-not-evict pins** (``pin``/``unpin``): the scheduler marks a prefetched
+replica do-not-evict for its consumer's lifetime, so coordinated eviction at
+comfortable capacity cannot undo prefetch work by dropping the duplicate it
+just paid to create. Pins are per (name, node) and counted (two consumers may
+pin the same replica); a fully-pinned tier stops evicting and runs overfull
+rather than dropping pinned data.
+
 Values can be anything sized: JAX arrays (``.nbytes``), numpy arrays, bytes, or
 :class:`SimObject` stand-ins for the simulator. ``get(name, at=node)`` returns
 the value AND a :class:`Transfer` record of the bytes that had to move — with
@@ -493,6 +500,9 @@ class LocStore:
         # ``is_dirty(name, node)`` reads it per replica.
         self._dirty: set[str] = set()
         self._mode: dict[str, str] = {}       # per-object write mode
+        # do-not-evict pin counts per (name, node) — the scheduler's shield
+        # around prefetched replicas until their consumer has run
+        self._pins: dict[tuple[str, int], int] = {}
         self._clock = 0
         self._lock = threading.RLock()
         self._rr = 0
@@ -514,6 +524,7 @@ class LocStore:
         self.coord_drops = 0           # replicated victims dropped, not moved
         self.bytes_coord_dropped = 0.0
         self.coordination_violations = 0   # a drop would have lost data (never)
+        self.pin_protected_evictions = 0   # evictions a pin actually diverted
 
     # ------------------------------------------------------------ placement
     def _default_placement(self, name: str) -> Placement:
@@ -557,6 +568,33 @@ class LocStore:
         """Effective write policy of one object ("through"/"back"/"around")."""
         return self._mode.get(name, self.write_policy)
 
+    # -------------------------------------------------- do-not-evict pinning
+    def pin(self, name: str, node: int) -> None:
+        """Mark ``name``'s replica on ``node`` do-not-evict (refcounted).
+
+        The ProactiveScheduler pins a replica it prefetched until the
+        consuming task finishes, so capacity pressure elsewhere on the node
+        cannot drop the duplicate it just created (the "prefetch undone by
+        coordinated eviction at comfortable capacity" ROADMAP bug)."""
+        with self._lock:
+            key = (name, node)
+            self._pins[key] = self._pins.get(key, 0) + 1
+
+    def unpin(self, name: str, node: int) -> None:
+        """Release one pin; unknown pins are ignored (the replica may have
+        been deleted or its node failed while pinned)."""
+        with self._lock:
+            key = (name, node)
+            n = self._pins.get(key, 0) - 1
+            if n > 0:
+                self._pins[key] = n
+            else:
+                self._pins.pop(key, None)
+
+    def is_pinned(self, name: str, node: int) -> bool:
+        with self._lock:
+            return self._pins.get((name, node), 0) > 0
+
     # --------------------------------------------------------------- victims
     def _replicas_elsewhere(self, name: str,
                             node: int, tier: str) -> list[tuple[int, str]]:
@@ -573,9 +611,8 @@ class LocStore:
 
     def _victim(self, node: int, tier: str, protect: str) -> str | None:
         recency = self._last_access.get((node, tier), {})
-        candidates = [n for n in recency if n != protect]
-        if not candidates:
-            return None
+        everyone = [n for n in recency if n != protect]
+        candidates = [n for n in everyone if not self._pins.get((n, node))]
         if self.eviction_policy == "cost":
             # cost-aware: large, stale objects go first — freeing the most
             # capacity for the least loss of hot data (GreedyDual-Size-ish;
@@ -584,26 +621,38 @@ class LocStore:
                                * (self._clock - recency[n] + 1))
         else:
             base = lambda n: recency[n]                         # noqa: E731
-        if not self.coordinated_eviction:
-            return min(candidates, key=base)
+        if self.coordinated_eviction:
+            # Cluster-coordinated: consult the LocationService and evict
+            # replicated objects before sole copies. Class 0: another
+            # replica in an equal-or-faster tier exists somewhere (this copy
+            # is fully redundant). Class 1: only colder duplicates elsewhere
+            # (this is the last fast-tier copy — evicting it is still free,
+            # but the dataset goes cold). Class 2: sole copy — demoting it
+            # moves real bytes.
+            my_rank = self.hierarchy.rank(tier)
 
-        # Cluster-coordinated: consult the LocationService and evict
-        # replicated objects before sole copies. Class 0: another replica in
-        # an equal-or-faster tier exists somewhere (this copy is fully
-        # redundant). Class 1: only colder duplicates elsewhere (this is the
-        # last fast-tier copy — evicting it is still free, but the dataset
-        # goes cold). Class 2: sole copy — demoting it moves real bytes.
-        my_rank = self.hierarchy.rank(tier)
+            def klass(n: str) -> int:
+                others = self._replicas_elsewhere(n, node, tier)
+                if not others:
+                    return 2
+                if any(self.hierarchy.rank(t) <= my_rank for _, t in others):
+                    return 0
+                return 1
 
-        def klass(n: str) -> int:
-            others = self._replicas_elsewhere(n, node, tier)
-            if not others:
-                return 2
-            if any(self.hierarchy.rank(t) <= my_rank for _, t in others):
-                return 0
-            return 1
-
-        return min(candidates, key=lambda n: (klass(n), base(n)))
+            key = lambda n: (klass(n), base(n))                 # noqa: E731
+        else:
+            key = base
+        if not candidates:
+            if everyone:        # only pinned choices: the pins blocked this
+                self.pin_protected_evictions += 1
+            return None
+        choice = min(candidates, key=key)
+        if len(candidates) != len(everyone):
+            # count a protection only when a pin CHANGED the outcome — the
+            # unpinned ranking would have evicted a pinned replica instead
+            if min(everyone, key=key) != choice:
+                self.pin_protected_evictions += 1
+        return choice
 
     def _evict(self, victim: str, node: int, tier: str,
                hops: list[TierHop] | None) -> None:
@@ -1082,6 +1131,8 @@ class LocStore:
             self._sizes.pop(name, None)
             self._dirty.discard(name)
             self._mode.pop(name, None)
+            for key in [k for k in self._pins if k[0] == name]:
+                del self._pins[key]
             self.writeback.cancel(name)
         self.loc.drop(name)
 
@@ -1121,21 +1172,30 @@ class LocStore:
             "bytes_clean_dropped": self.bytes_clean_dropped,
             "coord_drops": float(self.coord_drops),
             "bytes_coord_dropped": self.bytes_coord_dropped,
+            "pin_protected_evictions": float(self.pin_protected_evictions),
+            "pins": float(len(self._pins)),
         }
 
-    def tier_report(self) -> Mapping[str, Mapping[str, float]]:
-        """Per-tier residency and read traffic across all nodes."""
+    def tier_report(self, node: int | None = None
+                    ) -> Mapping[str, Mapping[str, float]]:
+        """Per-tier residency and read traffic; ``node`` narrows residency to
+        one node (bytes_read stays cluster-wide — reads are not attributed
+        per node), which is how the serving Router measures an engine's
+        tier pressure."""
         out: dict[str, dict[str, float]] = {
             t: {"resident_bytes": 0.0, "bytes_read": 0.0, "replicas": 0.0}
             for t in self.hierarchy.names()}
         with self._lock:
-            for (_, tier), used in self._usage.items():
+            for (n, tier), used in self._usage.items():
+                if node is not None and n != node:
+                    continue
                 out.setdefault(tier, {"resident_bytes": 0.0, "bytes_read": 0.0,
                                       "replicas": 0.0})
                 out[tier]["resident_bytes"] += used
             for res in self._residency.values():
-                for _, tier in res.items():
-                    out[tier]["replicas"] += 1
+                for n, tier in res.items():
+                    if node is None or n == node:
+                        out[tier]["replicas"] += 1
             for tier, nb in self.tier_reads.items():
                 out[tier]["bytes_read"] += nb
         return out
@@ -1157,3 +1217,4 @@ class LocStore:
             self.bytes_clean_dropped = 0.0
             self.coord_drops = 0
             self.bytes_coord_dropped = 0.0
+            self.pin_protected_evictions = 0

@@ -43,6 +43,8 @@ class PrefetchEngine:
                                         thread_name_prefix="xflow-prefetch")
         self._inflight: dict[tuple[str, int], Future] = {}
         self._device_copies: dict[tuple[str, int], Any] = {}
+        # consumer task -> replicas pinned do-not-evict on its behalf
+        self._pins_for: dict[str, list[tuple[str, int]]] = {}
         self._lock = threading.Lock()
         self.submitted = 0
         self.completed = 0
@@ -50,18 +52,69 @@ class PrefetchEngine:
         self.bytes_prefetched = 0.0
 
     # ------------------------------------------------------------------ api
-    def submit(self, name: str, dst: int, *, tier: str = "hbm") -> Future:
-        """Start pipelining ``name`` to node ``dst``'s ``tier`` (idempotent
-        per (name, dst) — the first requested tier wins)."""
+    def submit(self, name: str, dst: int, *, tier: str = "hbm",
+               pin_for: str | None = None) -> Future:
+        """Start pipelining ``name`` to node ``dst``'s ``tier``.
+
+        Idempotent per (name, dst) while a stage is in flight — but once the
+        previous stage has landed, a request for a tier *faster* than where
+        the replica sits NOW re-submits (a session cache parked back into
+        the burst buffer must still be promotable to HBM by every later
+        warm-up; the store may also have demoted or overwritten the replica
+        since the last stage, so the decision reads live placement, not a
+        recorded snapshot). ``pin_for`` names the consuming task: the
+        replica is pinned do-not-evict in the store until :meth:`release` is
+        called for that task, so capacity pressure cannot undo the prefetch
+        before its consumer runs."""
         key = (name, dst)
         with self._lock:
             fut = self._inflight.get(key)
-            if fut is not None:
+            if fut is not None and not self._should_restage(fut, name, dst,
+                                                            tier):
+                if pin_for is not None:
+                    self._pin(name, dst, pin_for)
                 return fut
             fut = self._pool.submit(self._stage, name, dst, tier)
             self._inflight[key] = fut
             self.submitted += 1
+            if pin_for is not None:
+                self._pin(name, dst, pin_for)
             return fut
+
+    def _should_restage(self, fut: Future, name: str, dst: int,
+                        tier: str) -> bool:
+        """A completed stage is stale when the replica is gone from ``dst``
+        or parked below the requested tier (read-once objects never
+        re-stage — their mode exists to avoid exactly that)."""
+        if not fut.done():
+            return False
+        mode_of = getattr(self.store, "write_mode", None)
+        if mode_of is not None and mode_of(name) == "around":
+            return False
+        hier = self.store.hierarchy
+        p = self.store.loc.lookup(name)
+        if p is None:
+            return False                       # object deleted: nothing to do
+        if not p.resident_on(dst):
+            return True                        # evicted off the node entirely
+        return hier.rank(hier.normalize(tier)) < hier.rank(p.tier_on(dst))
+
+    def _pin(self, name: str, dst: int, for_task: str) -> None:
+        """Caller holds the lock. Pin once per (task, name, dst)."""
+        if (name, dst) in self._pins_for.setdefault(for_task, []):
+            return
+        self.store.pin(name, dst)
+        self._pins_for[for_task].append((name, dst))
+
+    def release(self, for_task: str) -> int:
+        """Unpin every replica pinned on behalf of ``for_task`` (the consumer
+        finished — the prefetched copies are fair eviction game again).
+        Returns how many pins were released."""
+        with self._lock:
+            pinned = self._pins_for.pop(for_task, [])
+        for name, dst in pinned:
+            self.store.unpin(name, dst)
+        return len(pinned)
 
     def _stage(self, name: str, dst: int, tier: str) -> Any:
         value, tr = self.store.get(name)  # metadata read, no accounting
@@ -116,7 +169,10 @@ class PrefetchEngine:
 
     # ------------------------------------------------------------ reporting
     def report(self) -> dict[str, float]:
+        with self._lock:
+            pins = sum(len(v) for v in self._pins_for.values())
         return {"submitted": float(self.submitted),
                 "completed": float(self.completed),
                 "skipped_read_once": float(self.skipped_read_once),
+                "pins_held": float(pins),
                 "bytes_prefetched": self.bytes_prefetched}

@@ -54,6 +54,7 @@ class SimResult:
     writeback_bytes: float = 0.0
     clean_drops: int = 0          # free evictions (PFS already had the copy)
     coord_drops: int = 0          # free evictions (duplicate elsewhere)
+    pin_protected_evictions: int = 0  # evictions a do-not-evict pin diverted
 
     @property
     def locality_hit_rate(self) -> float:
@@ -137,6 +138,7 @@ class WorkflowSimulator:
         hierarchy: StorageHierarchy | None = None,
         write_policy: str = "through",
         coordinated_eviction: bool = False,
+        honor_write_modes: bool = False,
     ) -> None:
         self.wf = wf
         self.sched = scheduler
@@ -149,6 +151,13 @@ class WorkflowSimulator:
         self.failures = sorted(failures)
         self.proactive = (isinstance(scheduler, ProactiveScheduler)
                           if proactive is None else proactive)
+        # honor the compiler's per-dataset write-mode pins (pass 5): outputs
+        # pinned "around" stream straight to the PFS instead of landing in
+        # node tiers. Opt-in — it trades the consumer's (remote) read for
+        # zero tier occupancy, which only pays off under capacity pressure.
+        self.honor_write_modes = honor_write_modes
+        # prefetched replicas pinned do-not-evict until their consumer runs
+        self._task_pins: dict[str, list[tuple[str, int]]] = {}
         # place external inputs: remote tier (paper's parallel FS) or scattered
         for d in wf.graph.external_inputs():
             if external_loc == "remote":
@@ -280,7 +289,8 @@ class WorkflowSimulator:
                     nic_bg_free[req.dst] = start + dur
                     bytes_prefetched += req.est_bytes
                     heapq.heappush(events, (start + dur, next(seq), _XFER_DONE,
-                                            (req.data_name, req.dst, dst_tier)))
+                                            (req.data_name, req.dst, dst_tier,
+                                             req.for_task)))
 
         def fail_node(node: int, t0: float) -> None:
             nonlocal reruns
@@ -325,22 +335,34 @@ class WorkflowSimulator:
                 node = running_at.pop(tid)
                 state[tid] = "done"
                 done += 1
+                for pname, pdst in self._task_pins.pop(tid, []):
+                    self.store.unpin(pname, pdst)
                 if node not in self.cluster.failed:
                     self.cluster.free.add(node)
                 for out in wf.graph.tasks[tid].outputs:
                     pin = wf.graph.data[out].pinned_loc
                     loc = pin if pin is not None else node
+                    mode = (self.wf.write_modes.get(out)
+                            if self.honor_write_modes and pin is None else None)
                     if not self.store.exists(out):
-                        self.store.put(out, SimObject(self.wf.sizes[out]), loc=loc)
+                        self.store.put(out, SimObject(self.wf.sizes[out]),
+                                       loc=loc, mode=mode)
                 for s in wf.graph.successors(tid):
                     unfinished_preds[s] -= 1
                     if unfinished_preds[s] == 0 and state[s] == "pending":
                         state[s] = "ready"
                         ready.add(s)
             elif kind == _XFER_DONE:
-                name, dst, dst_tier = payload  # type: ignore[misc]
+                name, dst, dst_tier, for_task = payload  # type: ignore[misc]
                 if self.store.exists(name) and dst not in self.cluster.failed:
                     self.store.replicate(name, [dst], tier=dst_tier)
+                    # shield the fresh replica from (coordinated) eviction
+                    # until its consumer has run — prefetch work must not be
+                    # undone by capacity pressure at comfortable occupancy
+                    if state.get(for_task) not in ("done", None):
+                        self.store.pin(name, dst)
+                        self._task_pins.setdefault(for_task, []).append(
+                            (name, dst))
             elif kind == _WB_FLUSH:
                 self.store.drain_writebacks(max_entries=1)
             elif kind == _FAIL:
@@ -374,6 +396,7 @@ class WorkflowSimulator:
             writeback_bytes=rep["writeback_bytes"],
             clean_drops=int(rep["clean_drops"]),
             coord_drops=int(rep["coord_drops"]),
+            pin_protected_evictions=int(rep["pin_protected_evictions"]),
         )
 
     def _invalidate(self, tid: str, state: dict, unfinished_preds: dict,

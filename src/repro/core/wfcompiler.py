@@ -129,6 +129,11 @@ class CompiledWorkflow:
     # the per-dataset term est_stage_seconds sums; the scheduler compares it
     # against the consumer's compute time to classify hot vs bulk inputs.
     stage_seconds: dict[str, float] = dataclasses.field(default_factory=dict)
+    # dataset -> write-mode pin ("around" for run-once streaming outputs whose
+    # single consumer is predicted to run on the producing node — they never
+    # need to occupy node tiers for anyone else). The runtime decides whether
+    # to honor these (simulator/executor: honor_write_modes=True).
+    write_modes: dict[str, str] = dataclasses.field(default_factory=dict)
 
     def input_bytes(self, tid: str) -> float:
         return sum(self.sizes[n] for n in self.graph.tasks[tid].inputs)
@@ -207,10 +212,30 @@ def compile_workflow(graph: TaskGraph, hw: HardwareModel = TPU_V5E) -> CompiledW
         t = graph.tasks[tid]
         stage[tid] = sum(ds_stage[n] for n in t.inputs if n in external)
 
+    # -- pass 5: per-dataset write-mode pins ---------------------------------
+    # A produced dataset with exactly ONE consumer whose locality-bound node
+    # is the producing node is a write-around candidate: no other node will
+    # ever read it, so it need not occupy node tiers on anyone's behalf.
+    # Co-location is predicted statically the way the LocalityScheduler binds
+    # tasks — the consumer runs where the majority of its input bytes sit, so
+    # the pin fires only when this producer made a strict majority of them.
+    write_modes: dict[str, str] = {}
+    for d in graph.data.values():
+        if d.is_external or len(d.consumers) != 1:
+            continue
+        consumer = graph.tasks[d.consumers[0]]
+        total_in = sum(sizes[n] for n in consumer.inputs)
+        from_producer = sum(sizes[n] for n in consumer.inputs
+                            if graph.data[n].producer == d.producer)
+        if total_in > 0 and from_producer * 2 > total_in:
+            write_modes[d.name] = "around"
+            d.xattr["write_mode"] = "around"
+
     return CompiledWorkflow(
         graph=graph, hw=hw, topo=topo, sizes=sizes,
         est_flops=est_flops, est_seconds=est_seconds,
         earliest_start=earliest, upward_rank=rank,
         critical_path=cpath, critical_seconds=cseconds,
         est_stage_seconds=stage, stage_seconds=ds_stage,
+        write_modes=write_modes,
     )

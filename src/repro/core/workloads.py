@@ -23,7 +23,8 @@ from repro.core.dag import TaskGraph
 from repro.core.hints import Complexity, size_hint, task
 
 __all__ = ["fig2_workflow", "mapreduce_workflow", "montage_workflow",
-           "random_layered_workflow", "training_epoch_workflow"]
+           "random_layered_workflow", "serving_session_workflow",
+           "training_epoch_workflow"]
 
 MB = float(1 << 20)
 GB = float(1 << 30)
@@ -123,6 +124,40 @@ def random_layered_workflow(n_layers: int = 8, width: int = 16, *,
         prev = cur
     g.add_task("sink", inputs=tuple(prev), outputs=("final",),
                hints=task(compute=C("linear"), io_ratio=0.01))
+    return g
+
+
+def serving_session_workflow(n_sessions: int = 8, n_turns: int = 4, *,
+                             kv_bytes: float = 256 * MB,
+                             prompt_bytes: float = 64 * 1024.0,
+                             flops_per_byte: float = 2000.0,
+                             compute_skew: float = 0.35) -> TaskGraph:
+    """Multi-turn serving AS a workflow — a session's KV cache is the paper's
+    "file". Per session: a ``prefill`` task turns the first prompt into
+    ``kv_<s>_0``; each follow-up ``turn`` task consumes the previous turn's
+    KV cache plus a fresh (tiny, external) prompt and produces the next KV
+    cache. The KV chain is what a locality scheduler must keep on one node:
+    every migrated turn re-moves ``kv_bytes``, the sim analogue of the
+    serving engine's re-prefill. ``compute_skew`` spreads per-session turn
+    durations (session s runs at ``1 + s*skew`` relative cost) so turn
+    completions desynchronize — with identical durations every chain's next
+    turn is the only ready task the moment its producer's node frees up, and
+    even FCFS gets accidental 100% locality."""
+    g = TaskGraph()
+    for s in range(n_sessions):
+        C = lambda law: Complexity(law, flops_per_byte=flops_per_byte  # noqa: E731,E501
+                                   * (1.0 + s * compute_skew))
+        g.add_data(f"prompt{s}_0", size_bytes=size_hint(prompt_bytes))
+        g.add_data(f"kv{s}_0", size_bytes=size_hint(kv_bytes))
+        g.add_task(f"prefill{s}", inputs=(f"prompt{s}_0",),
+                   outputs=(f"kv{s}_0",), hints=task(compute=C("linear")))
+        for t in range(1, n_turns):
+            g.add_data(f"prompt{s}_{t}", size_bytes=size_hint(prompt_bytes))
+            g.add_data(f"kv{s}_{t}", size_bytes=size_hint(kv_bytes))
+            g.add_task(f"turn{s}_{t}",
+                       inputs=(f"kv{s}_{t-1}", f"prompt{s}_{t}"),
+                       outputs=(f"kv{s}_{t}",),
+                       hints=task(compute=C("linear")))
     return g
 
 

@@ -1,4 +1,4 @@
-"""Batched serving engine with location-aware session routing.
+"""Batched serving engine with location-aware, tier-aware session routing.
 
 Continuous batching over a fixed pool of decode slots: each session owns one
 batch slot of the shared KV-cache state; prefill admits sessions, decode steps
@@ -11,12 +11,34 @@ distributed :class:`~repro.core.locstore.LocationService`; follow-up requests
 look the session up and land on the engine/node that holds its cache
 (compute-on-data-path), instead of re-prefilling elsewhere — the measured
 saving is an entire prefill per follow-up turn (see bench_serving).
+
+Session caches are first-class replicas in the tiered
+:class:`~repro.core.locstore.LocStore` with their TRUE byte size (the batch-1
+slice of the pooled decode state), so capacity accounting and eviction see
+them:
+
+* an **active** session's cache is pinned in the store's top tier (HBM);
+* an **idle** session can be *parked* (:meth:`ServingEngine.park`): its KV
+  slice is read out of the engine slot and demoted to the burst-buffer tier,
+  freeing the slot for another session — under ``write_policy="back"`` the
+  store's :class:`~repro.core.locstore.WriteBackQueue` flushes it to the PFS
+  off the critical path if the burst buffer overflows too;
+* a follow-up to a parked session *resumes* it: the store promotes the cache
+  back to the top tier and the engine re-hydrates the slot from the stored
+  slice — no re-prefill, which is the entire point.
+
+The :class:`Router` is pressure- and tier-aware: a locality hit on a
+saturated engine is priced (media time to promote the parked cache, plus the
+demotions the promotion will cause, per ``store.tier_report(node=...)``)
+against a migrate-and-re-prefill on a free engine (the engine's *measured*
+prefill seconds), and the cheaper side wins.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Any
 
 import jax
@@ -25,18 +47,39 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.locstore import LocStore
+from repro.core.prefetch import PrefetchEngine
 from repro.models import model as M
 
 Pytree = Any
 
 
 @dataclasses.dataclass
+class KVSlice:
+    """One session's KV-cache slice as a store object with a true byte size.
+
+    ``state`` is the batch-1 decode-state pytree for a parked session, or
+    ``None`` while the session is live in an engine slot (the store then
+    holds a correctly-*sized* placeholder — capacity accounting and eviction
+    must see the real bytes either way; the zero-byte registration of the
+    pre-tiered engine hid serving traffic from the storage layer entirely).
+    """
+
+    state: Pytree | None
+    nbytes: float
+
+
+@dataclasses.dataclass
 class Session:
     sid: int
-    slot: int
+    slot: int | None              # None while parked (KV lives in the store)
     prompt_len: int
     tokens: list[int]
     done: bool = False
+    last_active: int = 0          # engine activity clock at last touch
+
+
+def _cache_name(sid: int) -> str:
+    return f"kvcache:session:{sid}"
 
 
 class ServingEngine:
@@ -45,10 +88,15 @@ class ServingEngine:
     _SID = itertools.count()      # session ids are GLOBALLY unique: the
     # location service keys caches by sid, so ids must not collide across
     # engines (the router depends on it).
+    _CLOCK = itertools.count(1)   # activity ticks are ALSO global: the
+    # router compares Session.last_active across engines to pick a
+    # cluster-wide LRU park victim, so per-engine clocks would make a busy
+    # engine's idle sessions look fresher than a quiet engine's active one.
 
     def __init__(self, cfg: ModelConfig, params: Pytree, *, max_batch: int = 4,
                  max_seq: int = 128, node: int = 0,
-                 store: LocStore | None = None, eos_id: int = -1) -> None:
+                 store: LocStore | None = None, eos_id: int = -1,
+                 idle_tier: str = "bb") -> None:
         cfg.validate()
         self.cfg = cfg
         self.params = params
@@ -57,6 +105,7 @@ class ServingEngine:
         self.node = node
         self.store = store
         self.eos_id = eos_id
+        self.idle_tier = idle_tier
         self.state = M.init_decode_state(cfg, max_batch, max_seq)
         self.sessions: dict[int, Session] = {}
         self._free_slots = list(range(max_batch))
@@ -66,10 +115,44 @@ class ServingEngine:
             lambda p, b: M.prefill(cfg, p, b, max_seq))
         self.steps = 0
         self.prefills = 0
+        self.parks = 0
+        self.resumes = 0
+        self.rehydrates = 0
+        self.prefill_seconds: float | None = None   # EMA of measured prefills
+        self._clock = 0
+        self._template: Pytree | None = None        # batch-1 state skeleton
+        self._slot_nbytes: float | None = None
+
+    # ---------------------------------------------------------- KV geometry
+    def _slot_template(self) -> Pytree:
+        """Batch-1 decode state: the shape key for slot reads/writes and the
+        true per-session KV byte size."""
+        if self._template is None:
+            self._template = M.init_decode_state(self.cfg, 1, self.max_seq)
+        return self._template
+
+    def slot_bytes(self) -> float:
+        """True size in bytes of one session's KV-cache slice."""
+        if self._slot_nbytes is None:
+            self._slot_nbytes = float(sum(
+                leaf.nbytes for leaf in jax.tree.leaves(self._slot_template())))
+        return self._slot_nbytes
+
+    def _cache_xattr(self, sid: int) -> dict[str, Any]:
+        return {"engine": self.node, "size": self.slot_bytes(), "sid": sid}
+
+    def _touch(self, sess: Session) -> None:
+        # _clock remembers the newest tick THIS engine issued — park_idle
+        # measures staleness against the engine's own latest activity
+        self._clock = sess.last_active = next(ServingEngine._CLOCK)
 
     # ------------------------------------------------------------ admission
     def can_admit(self) -> bool:
         return bool(self._free_slots)
+
+    def parked_sids(self) -> list[int]:
+        return [s.sid for s in self.sessions.values()
+                if not s.done and s.slot is None]
 
     def submit(self, prompt: list[int], extras: dict | None = None) -> int:
         """Prefill a prompt into a free slot; returns session id."""
@@ -90,7 +173,13 @@ class ServingEngine:
                                 else jnp.zeros((1, self.cfg.n_patches,
                                                 self.cfg.d_model),
                                                jnp.bfloat16))
+        t0 = time.perf_counter()
         logits, fresh = self._prefill1(self.params, batch)
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        # measured prefill cost — the router prices migrations with this
+        self.prefill_seconds = (dt if self.prefill_seconds is None
+                                else 0.5 * self.prefill_seconds + 0.5 * dt)
         self.prefills += 1
         # copy the single-session state into this slot of the pooled state
         self.state = _write_slot(self.state, fresh, slot)
@@ -98,17 +187,91 @@ class ServingEngine:
         sess = Session(sid=sid, slot=slot, prompt_len=len(prompt),
                        tokens=[first])
         self.sessions[sid] = sess
+        self._touch(sess)
         if self.store is not None:
-            name = f"kvcache:session:{sid}"
-            size = float(len(prompt) * self.cfg.d_model * 2)
-            self.store.put(name, memoryview(b""), loc=self.node,
-                           xattr={"engine": self.node, "size": size})
+            # live session: a correctly-SIZED placeholder pinned in the top
+            # tier — eviction and tier_report() must account the real bytes
+            self.store.put(_cache_name(sid),
+                           KVSlice(None, self.slot_bytes()), loc=self.node,
+                           xattr=self._cache_xattr(sid))
         return sid
+
+    # ------------------------------------------------------ park / resume
+    def park(self, sid: int) -> None:
+        """Evict an idle session from its engine slot into the storage
+        hierarchy: the KV slice moves to ``idle_tier`` (burst buffer), the
+        slot frees up for another session. The session is NOT finished — a
+        later :meth:`resume` re-hydrates it without a prefill."""
+        if self.store is None:
+            raise RuntimeError("parking sessions requires a LocStore")
+        s = self.sessions[sid]
+        if s.done:
+            raise RuntimeError(f"session {sid} already finished")
+        if s.slot is None:
+            return                                   # already parked
+        state = _read_slot(self.state, self._slot_template(), s.slot)
+        self.store.put(_cache_name(sid), KVSlice(state, self.slot_bytes()),
+                       loc=self.node, tier=self.idle_tier,
+                       xattr=self._cache_xattr(sid))
+        self._free_slots.append(s.slot)
+        s.slot = None
+        self.parks += 1
+
+    def park_lru(self) -> int | None:
+        """Park the least-recently-active slotted session (to make room).
+        Returns its sid, or None when no session can be parked."""
+        live = [s for s in self.sessions.values()
+                if not s.done and s.slot is not None]
+        if not live or self.store is None:
+            return None
+        victim = min(live, key=lambda s: s.last_active)
+        self.park(victim.sid)
+        return victim.sid
+
+    def park_idle(self, max_idle: int) -> list[int]:
+        """Park every session idle for more than ``max_idle`` activity ticks
+        (the serving loop's idle-demotion sweep). Returns parked sids."""
+        out = []
+        for s in list(self.sessions.values()):
+            if (not s.done and s.slot is not None
+                    and self._clock - s.last_active > max_idle):
+                self.park(s.sid)
+                out.append(s.sid)
+        return out
+
+    def resume(self, sid: int) -> bool:
+        """Bring a parked session back into a slot WITHOUT re-prefilling:
+        the store promotes the KV slice back to the top tier and the engine
+        writes it into a free slot. Returns True if a re-hydration happened
+        (False: the session was already live)."""
+        s = self.sessions[sid]
+        if s.done:
+            raise RuntimeError(f"session {sid} already finished")
+        if s.slot is not None:
+            self._touch(s)
+            return False
+        if not self._free_slots:
+            raise RuntimeError("engine full")
+        value, _ = self.store.get(_cache_name(sid), at=self.node)
+        if not isinstance(value, KVSlice) or value.state is None:
+            raise RuntimeError(f"session {sid} has no parked KV state")
+        slot = self._free_slots.pop()
+        self.state = _write_slot(self.state, value.state, slot)
+        s.slot = slot
+        self._touch(s)
+        self.resumes += 1
+        self.rehydrates += 1
+        # live again: swap the stored slice back to a sized placeholder in
+        # the top tier (the authoritative KV is in the engine slot now)
+        self.store.put(_cache_name(sid), KVSlice(None, self.slot_bytes()),
+                       loc=self.node, xattr=self._cache_xattr(sid))
+        return True
 
     # ---------------------------------------------------------------- decode
     def step(self) -> dict[int, int]:
         """One decode step for every live session; returns {sid: new_token}."""
-        live = [s for s in self.sessions.values() if not s.done]
+        live = [s for s in self.sessions.values()
+                if not s.done and s.slot is not None]
         if not live:
             return {}
         tokens = np.zeros((self.max_batch, 1), np.int32)
@@ -123,6 +286,7 @@ class ServingEngine:
             tok = int(arg[s.slot])
             s.tokens.append(tok)
             out[s.sid] = tok
+            self._touch(s)
             if tok == self.eos_id or \
                     s.prompt_len + len(s.tokens) >= self.max_seq - 1:
                 self.finish(s.sid)
@@ -132,9 +296,11 @@ class ServingEngine:
         s = self.sessions[sid]
         if not s.done:
             s.done = True
-            self._free_slots.append(s.slot)
+            if s.slot is not None:
+                self._free_slots.append(s.slot)
+                s.slot = None
             if self.store is not None:
-                self.store.delete(f"kvcache:session:{sid}")
+                self.store.delete(_cache_name(sid))
         return s.tokens
 
     def generate(self, prompt: list[int], max_new: int = 16) -> list[int]:
@@ -165,27 +331,173 @@ def _write_slot(pooled: Pytree, single: Pytree, slot: int) -> Pytree:
     return jax.tree.map(ins, pooled, single)
 
 
+def _read_slot(pooled: Pytree, template: Pytree, slot: int) -> Pytree:
+    """Extract slot ``slot`` of the pooled state as a batch-1 state — the
+    exact inverse of :func:`_write_slot` (``template`` is any batch-1 state,
+    used only for its shapes)."""
+
+    def ext(p, s):
+        if p.shape == s.shape:   # max_batch == 1: the pooled state IS the slot
+            return p
+        axis = next(i for i, (a, b) in enumerate(zip(p.shape, s.shape))
+                    if a != b and b == 1)
+        idx = [slice(None)] * p.ndim
+        idx[axis] = slice(slot, slot + 1)
+        return p[tuple(idx)]
+
+    return jax.tree.map(ext, pooled, template)
+
+
 class Router:
-    """Location-aware request router over several engines (paper layer 3).
+    """Location-, tier- and pressure-aware request router (paper layer 3).
 
-    ``route(session_id)`` queries the location service for the node holding
-    the session's KV cache; new sessions go to the least-loaded engine with a
-    free slot. Hit accounting backs bench_serving."""
+    ``engine_for(session_id)`` queries the location service for the node
+    holding the session's KV cache. A locality hit is only taken when the
+    holder can actually serve it: a session still in a slot is free to
+    continue; a *parked* session needs a slot and a promotion, so the router
+    prices the resume (tier media time via ``hierarchy.bw`` — the cluster
+    view's ``tier_gbps`` — plus the demotions the promotion will cause at the
+    engine's measured tier pressure, ``store.tier_report(node=...)``) against
+    a migrate-and-re-prefill on the best other engine (its *measured*
+    ``prefill_seconds``), and falls through when migrating is cheaper
+    (``locality_evictions``). New sessions go to the least-loaded engine with
+    a free slot; when every slot in the cluster is taken, the router parks
+    the least-recently-active session somewhere (``allow_park``) instead of
+    raising "engine full". Hit accounting backs bench_serving.
+    """
 
-    def __init__(self, engines: list[ServingEngine], store: LocStore) -> None:
+    def __init__(self, engines: list[ServingEngine], store: LocStore, *,
+                 prefetch: PrefetchEngine | None = None,
+                 allow_park: bool = True) -> None:
         self.engines = {e.node: e for e in engines}
         self.store = store
+        self.prefetch = prefetch
+        self.allow_park = allow_park
         self.locality_hits = 0
         self.locality_misses = 0
+        self.locality_evictions = 0   # hit engine full/saturated: migrated
+        self.migrations = 0
+        self.warmups = 0
 
+    # ------------------------------------------------------------ cost model
+    def _resume_cost(self, eng: ServingEngine, name: str) -> float:
+        """Seconds to bring a parked session's KV back into the holder's top
+        tier: media read of the tier it is parked in + top-tier write, plus —
+        when the engine is saturated — the park of a victim session and the
+        demotions the promotion causes under top-tier pressure."""
+        hier = self.store.hierarchy
+        p = self.store.stat(name)
+        kv = float(p.xattr.get("size", 0.0))
+        tier = p.tier_on(eng.node)
+        cost = hier.media_seconds(kv, tier) + hier.media_seconds(kv, hier.top)
+        idle_tier = hier.normalize(eng.idle_tier)
+        if not eng.can_admit():
+            # a victim session must be parked first (top read + idle write)
+            cost += (hier.media_seconds(kv, hier.top)
+                     + hier.media_seconds(kv, idle_tier))
+        top_used = self.store.tier_report(node=eng.node)[hier.top][
+            "resident_bytes"]
+        if top_used + kv > hier.capacity(hier.top):
+            # promotion at pressure: the store will demote someone else
+            cost += hier.media_seconds(kv, idle_tier)
+        return cost
+
+    def _migrate_cost(self, exclude: ServingEngine) -> float:
+        """Seconds to re-prefill on the best other engine with a free slot,
+        using each engine's measured prefill time (inf until one exists —
+        never migrate onto an engine we know nothing about)."""
+        costs = [e.prefill_seconds
+                 for e in self.engines.values()
+                 if e is not exclude and e.can_admit()
+                 and e.prefill_seconds is not None]
+        return min(costs) if costs else float("inf")
+
+    # -------------------------------------------------------------- routing
     def engine_for(self, sid: int | None = None) -> ServingEngine:
-        if sid is not None and self.store.exists(f"kvcache:session:{sid}"):
-            node = self.store.getxattr(f"kvcache:session:{sid}", "engine")
-            if node in self.engines:
-                self.locality_hits += 1
-                return self.engines[node]
+        passed_over: ServingEngine | None = None
+        if sid is not None and self.store.exists(_cache_name(sid)):
+            node = self.store.getxattr(_cache_name(sid), "engine")
+            eng = self.engines.get(node)
+            sess = eng.sessions.get(sid) if eng is not None else None
+            if sess is not None and not sess.done:
+                if sess.slot is not None:
+                    self.locality_hits += 1      # live in a slot: free
+                    return eng
+                # parked: needs a slot. Full + no parkable victim, or a
+                # migrate priced cheaper than the promotion -> fall through.
+                can_serve = (eng.can_admit()
+                             or (self.allow_park
+                                 and any(s.slot is not None and not s.done
+                                         for s in eng.sessions.values())))
+                if can_serve and (self._resume_cost(eng, _cache_name(sid))
+                                  <= self._migrate_cost(eng)):
+                    self.locality_hits += 1
+                    return eng
+                self.locality_evictions += 1
+                passed_over = eng                # the decision was to migrate
         self.locality_misses += sid is not None
-        free = [e for e in self.engines.values() if e.can_admit()]
+        free = [e for e in self.engines.values()
+                if e.can_admit() and e is not passed_over]
         if not free:
+            if self.allow_park:
+                # park the least-recently-active session cluster-wide
+                candidates = [e for e in self.engines.values()
+                              if any(s.slot is not None and not s.done
+                                     for s in e.sessions.values())]
+                if candidates:
+                    eng = min(candidates, key=lambda e: min(
+                        s.last_active for s in e.sessions.values()
+                        if s.slot is not None and not s.done))
+                    eng.park_lru()
+                    return eng
             raise RuntimeError("all engines full")
         return max(free, key=lambda e: len(e._free_slots))
+
+    def ensure_active(self, eng: ServingEngine, sid: int) -> bool:
+        """Make a routed-to session live in a slot (parking a victim if the
+        engine is full). Returns True if a parked session was re-hydrated."""
+        sess = eng.sessions[sid]
+        if sess.slot is not None:
+            return False
+        if not eng.can_admit():
+            if not self.allow_park or eng.park_lru() is None:
+                raise RuntimeError("engine full")
+        return eng.resume(sid)
+
+    def follow_up(self, sid: int, history: list[int]
+                  ) -> tuple[ServingEngine, int]:
+        """Route one follow-up turn end-to-end. On a locality hit the session
+        is resumed in place (no prefill); otherwise it migrates: the old
+        engine drops it and the target re-prefills ``history``. Returns
+        (engine, sid) — the sid changes on a migration."""
+        eng = self.engine_for(sid)
+        sess = eng.sessions.get(sid)
+        if sess is not None and not sess.done:
+            self.ensure_active(eng, sid)
+            return eng, sid
+        # migration: the cache holder (if any) discards its copy
+        for e in self.engines.values():
+            s = e.sessions.get(sid)
+            if s is not None and not s.done:
+                e.finish(sid)
+        self.migrations += 1
+        if not eng.can_admit():     # engine_for made room already unless flat
+            raise RuntimeError("engine full")
+        new_sid = eng.submit(history)
+        return eng, new_sid
+
+    def warm(self, sid: int) -> bool:
+        """Asynchronously promote a parked session's KV back toward the top
+        tier ahead of its next turn (the serving analogue of the proactive
+        prefetch). No-op without a prefetch engine or for live sessions."""
+        if self.prefetch is None or not self.store.exists(_cache_name(sid)):
+            return False
+        node = self.store.getxattr(_cache_name(sid), "engine")
+        eng = self.engines.get(node)
+        sess = eng.sessions.get(sid) if eng is not None else None
+        if sess is None or sess.done or sess.slot is not None:
+            return False
+        self.prefetch.submit(_cache_name(sid), node,
+                             tier=self.store.hierarchy.top)
+        self.warmups += 1
+        return True

@@ -62,3 +62,28 @@ def test_trend_checker_importable_and_selfchecks():
     cur0 = [{"name": "a", "us_per_call": 0.0, "derived": "remote_gib=3.00"}]
     (r0,) = check_trend.regressions(cur0, base0)
     assert r0.current == 3.0 and str(r0)      # printable despite inf ratio
+    # per-row allow-list: the waived (row, metric) passes, others still fail
+    waived = []
+    assert check_trend.regressions(cur_bad, base,
+                                   allowed={("a", "remote_gib")},
+                                   waived=waived) == []
+    assert len(waived) == 1 and waived[0].name == "a"
+    assert check_trend.regressions(cur_bad, base,
+                                   allowed={("other", "remote_gib")})
+
+
+def test_trend_allowlist_requires_reason(tmp_path):
+    import json
+
+    from benchmarks import check_trend
+
+    good = tmp_path / "allow.json"
+    good.write_text(json.dumps([{"name": "a", "metric": "remote_gib",
+                                 "reason": "deliberate: see PR"}]))
+    assert check_trend.load_allowlist(str(good)) == {("a", "remote_gib")}
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps([{"name": "a", "metric": "remote_gib"}]))
+    import pytest
+    with pytest.raises(ValueError):
+        check_trend.load_allowlist(str(bad))
+    assert check_trend.load_allowlist(str(tmp_path / "missing.json")) == set()

@@ -1,5 +1,6 @@
 """Serving engine: continuous batching, slot isolation, location-aware
-routing."""
+routing, and the tiered session lifecycle (KV caches as first-class
+LocStore replicas: submit -> idle-park -> resume-promote -> finish)."""
 
 import dataclasses
 
@@ -9,9 +10,12 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke
-from repro.core.locstore import LocStore
+from repro.core.locstore import (LocStore, StorageHierarchy, TierSpec,
+                                 tiered_hierarchy)
+from repro.core.prefetch import PrefetchEngine
 from repro.models import decode_step, init_params, prefill
-from repro.serve.engine import Router, ServingEngine, _write_slot
+from repro.serve.engine import (Router, ServingEngine, _cache_name,
+                                _read_slot, _write_slot)
 
 
 @pytest.fixture(scope="module")
@@ -68,9 +72,108 @@ def test_slots_recycled(setup):
     cfg, params = setup
     eng = ServingEngine(cfg, params, max_batch=1, max_seq=64)
     s1 = eng.submit([1, 2])
-    eng.finish(s1)
+    slot1 = eng.sessions[s1].slot
+    eng.finish(s1)                   # releases the slot (slot -> None)
     s2 = eng.submit([3, 4])          # must not raise: slot recycled
-    assert eng.sessions[s2].slot == eng.sessions[s1].slot
+    assert eng.sessions[s2].slot == slot1
+    assert eng.sessions[s1].slot is None
+
+
+def _tiered_store(n_nodes, kv_bytes, slots_per_node=2):
+    """hbm holds exactly the live slots; parked sessions land in bb."""
+    return LocStore(n_nodes, hierarchy=tiered_hierarchy(
+        hbm_bytes=slots_per_node * kv_bytes,
+        host_bytes=slots_per_node * kv_bytes,
+        bb_bytes=float(1 << 30)), write_policy="back")
+
+
+def test_submit_registers_true_kv_bytes(setup):
+    """The zero-byte-placeholder bugfix: capacity accounting must see the
+    session cache's real size, not 0 bytes hidden in an xattr."""
+    cfg, params = setup
+    probe = ServingEngine(cfg, params, max_batch=2, max_seq=64)
+    kv = probe.slot_bytes()
+    assert kv > 0
+    store = _tiered_store(1, kv)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, node=0,
+                        store=store)
+    sid = eng.submit([1, 2, 3])
+    name = _cache_name(sid)
+    assert store.getxattr(name, "size") == kv
+    rep = store.tier_report()
+    assert rep["hbm"]["resident_bytes"] == kv        # true bytes, top tier
+    assert store.stat(name).tier_on(0) == "hbm"
+    sid2 = eng.submit([4, 5])
+    assert store.tier_report()["hbm"]["resident_bytes"] == 2 * kv
+    eng.finish(sid)
+    eng.finish(sid2)
+    assert store.tier_report()["hbm"]["resident_bytes"] == 0.0
+
+
+def test_session_lifecycle_submit_park_resume_finish(setup):
+    cfg, params = setup
+    probe = ServingEngine(cfg, params, max_batch=2, max_seq=64)
+    kv = probe.slot_bytes()
+    store = _tiered_store(1, kv)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, node=0,
+                        store=store)
+    control = ServingEngine(cfg, params, max_batch=2, max_seq=64)
+
+    sid = eng.submit([5, 6, 7])
+    c_sid = control.submit([5, 6, 7])
+    for _ in range(2):
+        eng.step()
+        control.step()
+    # idle-demote: the KV slice moves to the burst-buffer tier, slot frees
+    eng.park(sid)
+    name = _cache_name(sid)
+    assert eng.sessions[sid].slot is None
+    assert eng.can_admit()
+    assert store.stat(name).tier_on(0) == "bb"
+    assert store.tier_report()["bb"]["resident_bytes"] == kv
+    # resume-promote: back to hbm, slot re-hydrated from the stored slice —
+    # NO re-prefill, and decode continues bit-identically to never parking
+    prefills_before = eng.prefills
+    assert eng.resume(sid)
+    assert eng.prefills == prefills_before
+    assert eng.rehydrates == 1
+    assert store.stat(name).tier_on(0) == "hbm"
+    for _ in range(2):
+        eng.step()
+        control.step()
+    assert eng.sessions[sid].tokens == control.sessions[c_sid].tokens
+    # finish deletes the replica
+    eng.finish(sid)
+    assert not store.exists(name)
+    assert store.tier_report()["hbm"]["resident_bytes"] == 0.0
+
+
+def test_park_idle_sweep(setup):
+    cfg, params = setup
+    probe = ServingEngine(cfg, params, max_batch=2, max_seq=64)
+    store = _tiered_store(1, probe.slot_bytes())
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, node=0,
+                        store=store)
+    s1 = eng.submit([1, 2])
+    s2 = eng.submit([3, 4])          # s2 touched after s1
+    parked = eng.park_idle(max_idle=0)   # stale == anything but the newest
+    assert parked == [s1]
+    assert eng.sessions[s1].slot is None
+    assert eng.sessions[s2].slot is not None
+
+
+def test_read_slot_inverts_write_slot(setup):
+    cfg, params = setup
+    from repro.models import init_decode_state
+    pooled = init_decode_state(cfg, 4, 32)
+    template = init_decode_state(cfg, 1, 32)
+    batch = {"tokens": jnp.asarray([[3, 1, 4]], jnp.int32)}
+    batch["labels"] = batch["tokens"]
+    _, single = prefill(cfg, params, batch, 32)
+    merged = _write_slot(pooled, single, 2)
+    back = _read_slot(merged, template, 2)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(single)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_router_routes_to_cache_holder(setup):
@@ -89,3 +192,102 @@ def test_router_routes_to_cache_holder(setup):
     other = router.engine_for(99_999)
     assert router.locality_misses == 1
     assert other.can_admit()
+
+
+def test_router_full_engine_locality_hit_falls_through(setup):
+    """The PR 4 router bugfix: a locality hit whose engine cannot admit the
+    session must fall through to load balancing (counted as a distinct
+    locality_evictions stat) instead of letting the caller hit 'engine
+    full'."""
+    cfg, params = setup
+    probe = ServingEngine(cfg, params, max_batch=1, max_seq=64)
+    store = _tiered_store(2, probe.slot_bytes(), slots_per_node=1)
+    engines = [ServingEngine(cfg, params, max_batch=1, max_seq=64, node=i,
+                             store=store) for i in range(2)]
+    e0, e1 = engines
+    # e1 has a measured prefill cost and a free slot (a migrate target)
+    warm = e1.submit([7, 7])
+    e1.finish(warm)
+    router = Router(engines, store, allow_park=False)   # flat-pinning rules
+    sid = e0.submit([1, 2, 3])
+    e0.park(sid)                     # parked: resuming needs a slot
+    blocker = e0.submit([9, 9])      # ...but e0's only slot is taken
+    assert not e0.can_admit()
+    target = router.engine_for(sid)  # must NOT return the full holder
+    assert target is e1
+    assert router.locality_evictions == 1
+    assert router.locality_hits == 0
+    # follow_up completes the migration without an 'engine full' error
+    hist = list(e0.sessions[sid].tokens)
+    eng, new_sid = router.follow_up(sid, hist)
+    assert eng is e1 and new_sid != sid
+    assert router.migrations == 1
+    assert e0.sessions[sid].done     # the holder dropped the stale session
+    assert e0.sessions[blocker].slot is not None    # blocker untouched
+
+
+def test_router_resumes_parked_session_by_parking_victim(setup):
+    """With parking allowed and no cheap migrate target, a follow-up to a
+    full engine parks the LRU victim and re-hydrates in place — zero
+    re-prefills."""
+    cfg, params = setup
+    probe = ServingEngine(cfg, params, max_batch=1, max_seq=64)
+    store = _tiered_store(2, probe.slot_bytes(), slots_per_node=1)
+    engines = [ServingEngine(cfg, params, max_batch=1, max_seq=64, node=i,
+                             store=store) for i in range(2)]
+    e0, e1 = engines                 # e1 idle: no measured prefill -> inf
+    router = Router(engines, store)
+    sid = e0.submit([1, 2, 3])
+    e0.park(sid)
+    blocker = e0.submit([9, 9])
+    prefills = e0.prefills
+    eng, same_sid = router.follow_up(sid, [1, 2, 3])
+    assert eng is e0 and same_sid == sid
+    assert e0.sessions[sid].slot is not None         # re-hydrated
+    assert e0.sessions[blocker].slot is None         # victim parked
+    assert e0.prefills == prefills                   # no re-prefill
+    assert router.locality_hits == 1
+    assert e0.resumes == 1
+
+
+def test_router_pressure_prefers_fast_migrate(setup):
+    """Tier-awareness: when the parked cache sits behind a glacial medium,
+    the priced resume loses to a re-prefill on a free engine."""
+    cfg, params = setup
+    probe = ServingEngine(cfg, params, max_batch=1, max_seq=64)
+    kv = probe.slot_bytes()
+    # burst buffer at 10 B/s: promoting the parked KV costs ~kv/10 seconds
+    store = LocStore(2, hierarchy=StorageHierarchy(
+        [TierSpec("hbm", kv, 819e9), TierSpec("bb", float(1 << 30), 10.0)],
+        remote=TierSpec("remote", float("inf"), 2e9)))
+    engines = [ServingEngine(cfg, params, max_batch=1, max_seq=64, node=i,
+                             store=store) for i in range(2)]
+    e0, e1 = engines
+    warm = e1.submit([7, 7])         # measured (fast) prefill on e1
+    e1.finish(warm)
+    router = Router(engines, store)
+    sid = e0.submit([1, 2, 3])
+    e0.park(sid)
+    assert e0.can_admit()            # a slot IS free: only cost disqualifies
+    target = router.engine_for(sid)
+    assert target is e1
+    assert router.locality_evictions == 1
+
+
+def test_router_warm_promotes_parked_cache(setup):
+    cfg, params = setup
+    probe = ServingEngine(cfg, params, max_batch=2, max_seq=64)
+    store = _tiered_store(1, probe.slot_bytes())
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64, node=0,
+                        store=store)
+    prefetch = PrefetchEngine(store)
+    router = Router([eng], store, prefetch=prefetch)
+    sid = eng.submit([1, 2, 3])
+    eng.park(sid)
+    assert store.stat(_cache_name(sid)).tier_on(0) == "bb"
+    assert router.warm(sid)
+    prefetch.drain()
+    assert store.stat(_cache_name(sid)).tier_on(0) == "hbm"
+    assert router.warmups == 1
+    assert not router.warm(99_999)   # unknown session: no-op
+    prefetch.shutdown()

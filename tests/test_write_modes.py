@@ -1,0 +1,67 @@
+"""Compiler-emitted per-dataset write-mode pins (PR 4 satellite).
+
+The compiler knows consumer counts: a produced dataset with exactly one
+consumer whose locality-bound node is the producing node is pinned
+``mode="around"`` (run-once streaming output — no other node ever reads it),
+and the simulator can honor the pins (``honor_write_modes=True``).
+"""
+
+from repro.core import HPC_CLUSTER, LocalityScheduler, compile_workflow
+from repro.core.simulator import WorkflowSimulator
+from repro.core.workloads import (fig2_workflow, montage_workflow,
+                                  serving_session_workflow)
+
+
+class TestEmittedPins:
+    def test_fig2_single_consumer_chains_pinned(self):
+        wf = compile_workflow(fig2_workflow(), HPC_CLUSTER)
+        # part_a -> filter_a is the consumer's ONLY input: co-located, pinned
+        for name in ("part_a", "part_b", "fa", "fb"):
+            assert wf.write_modes.get(name) == "around", name
+            assert wf.graph.data[name].xattr.get("write_mode") == "around"
+
+    def test_fig2_fanin_inputs_not_pinned(self):
+        wf = compile_workflow(fig2_workflow(), HPC_CLUSTER)
+        # ra/rb each feed merge at a 50/50 byte split: neither producer is a
+        # strict majority, so the consumer's node is not predictable
+        assert "ra" not in wf.write_modes
+        assert "rb" not in wf.write_modes
+
+    def test_externals_and_sinks_not_pinned(self):
+        wf = compile_workflow(fig2_workflow(), HPC_CLUSTER)
+        assert "raw" not in wf.write_modes       # external input
+        assert "result" not in wf.write_modes    # zero consumers
+
+    def test_multi_consumer_not_pinned(self):
+        wf = compile_workflow(montage_workflow(8), HPC_CLUSTER)
+        # proj<i> feeds diff tasks AND correct<i>: multiple consumers
+        assert "proj0" not in wf.write_modes
+
+    def test_serving_kv_chain_pinned(self):
+        wf = compile_workflow(serving_session_workflow(2, 3), HPC_CLUSTER)
+        # kv<s>_<t> dominates the next turn's input bytes (prompt is tiny)
+        assert wf.write_modes.get("kv0_0") == "around"
+        assert wf.write_modes.get("kv0_1") == "around"
+        assert "kv0_2" not in wf.write_modes     # final turn: no consumer
+
+
+class TestSimulatorHonorsPins:
+    def test_default_ignores_pins(self):
+        wf = compile_workflow(fig2_workflow(), HPC_CLUSTER)
+        sim = WorkflowSimulator(wf, LocalityScheduler(wf), n_nodes=4,
+                                hw=HPC_CLUSTER)
+        sim.run()
+        assert sim.store.write_mode("part_a") == "through"
+
+    def test_honor_write_modes_streams_pinned_outputs(self):
+        wf = compile_workflow(fig2_workflow(), HPC_CLUSTER)
+        sim = WorkflowSimulator(wf, LocalityScheduler(wf), n_nodes=4,
+                                hw=HPC_CLUSTER, honor_write_modes=True)
+        r = sim.run()
+        assert r.tasks_done == len(wf.graph.tasks)
+        assert sim.store.write_mode("part_a") == "around"
+        # around outputs live on the PFS only — they never occupy node tiers
+        assert sim.store.stat("part_a").tier_on(
+            sim.store.stat("part_a").real_loc) == "remote"
+        # unpinned datasets keep the store default
+        assert sim.store.write_mode("ra") == "through"

@@ -247,6 +247,103 @@ class TestCoordinatedEviction:
         assert st.exists("d")
 
 
+class TestDoNotEvictPins:
+    """PR 4 satellite: prefetched replicas are pinned do-not-evict for their
+    consumer's lifetime, so coordinated eviction at comfortable capacity
+    cannot undo prefetch work (the bench_writeback 1 GiB regression)."""
+
+    def test_pinned_replica_survives_eviction_pressure(self):
+        st = LocStore(2, hierarchy=tiny_hierarchy(100),
+                      coordinated_eviction=True)
+        st.put("dup", SimObject(60.0), loc=(0, 1))   # prefetched duplicate
+        st.pin("dup", 0)
+        st.put("new", SimObject(60.0), loc=0)        # pressure on node 0
+        # without the pin this is exactly test_replicated_victim_dropped_...:
+        # dup@0 would be the coordinated-eviction victim. Pinned, it stays.
+        assert st.stat("dup").resident_on(0)
+        assert st.coord_drops == 0
+        assert st.pin_protected_evictions > 0
+        st.unpin("dup", 0)
+        st.put("more", SimObject(60.0), loc=0)       # unpinned: fair game
+        assert not st.stat("dup").resident_on(0)
+        assert st.coord_drops >= 1
+
+    def test_pin_refcounting(self):
+        st = LocStore(1, hierarchy=tiny_hierarchy(100))
+        st.put("a", SimObject(10.0), loc=0)
+        st.pin("a", 0)
+        st.pin("a", 0)
+        st.unpin("a", 0)
+        assert st.is_pinned("a", 0)                  # one pin still held
+        st.unpin("a", 0)
+        assert not st.is_pinned("a", 0)
+        st.unpin("a", 0)                             # over-unpin is harmless
+        assert not st.is_pinned("a", 0)
+
+    def test_delete_clears_pins(self):
+        st = LocStore(1, hierarchy=tiny_hierarchy(100))
+        st.put("a", SimObject(10.0), loc=0)
+        st.pin("a", 0)
+        st.delete("a")
+        assert not st.is_pinned("a", 0)
+
+    def test_fully_pinned_tier_runs_overfull_never_drops(self):
+        st = LocStore(1, hierarchy=tiny_hierarchy(100),
+                      coordinated_eviction=True)
+        st.put("a", SimObject(60.0), loc=0)
+        st.pin("a", 0)
+        st.put("b", SimObject(60.0), loc=0)          # no victim available
+        st.pin("b", 0)
+        assert st.stat("a").tier_on(0) == "hbm"
+        assert st.stat("b").tier_on(0) == "hbm"      # overfull, not dropped
+
+    def test_prefetch_engine_pins_until_release(self):
+        st = LocStore(2, hierarchy=small_hierarchy(100))
+        st.put("x", SimObject(10.0), loc=0)
+        eng = PrefetchEngine(st)
+        eng.submit("x", 1, tier="hbm", pin_for="consumer_task")
+        eng.drain()
+        assert st.is_pinned("x", 1)
+        assert eng.report()["pins_held"] == 1
+        assert eng.release("consumer_task") == 1
+        assert not st.is_pinned("x", 1)
+        assert eng.release("consumer_task") == 0     # idempotent
+        eng.shutdown()
+
+    def test_prefetch_tier_upgrade_resubmits(self):
+        """A later request for a FASTER tier must not be swallowed by the
+        (name, dst) idempotence — a bb-staged session cache still needs its
+        HBM warm-up."""
+        st = LocStore(2, hierarchy=small_hierarchy(100))
+        st.put("x", SimObject(10.0), loc=0)
+        eng = PrefetchEngine(st)
+        eng.submit("x", 1, tier="bb")
+        eng.drain()
+        assert st.stat("x").tier_on(1) == "bb"
+        eng.submit("x", 1, tier="hbm")
+        eng.drain()
+        assert st.stat("x").tier_on(1) == "hbm"
+        assert eng.submitted == 2
+        eng.shutdown()
+
+    def test_sim_releases_all_pins_by_end_of_run(self):
+        wf = compile_workflow(montage_workflow(16), HPC_CLUSTER)
+        sim = WorkflowSimulator(wf, ProactiveScheduler(wf), n_nodes=4,
+                                hw=HPC_CLUSTER,
+                                hierarchy=StorageHierarchy(
+                                    [TierSpec("hbm", 0.25 * GB / 4, 819e9),
+                                     TierSpec("host", 0.25 * GB, 100e9),
+                                     TierSpec("bb", 4 * GB, 8e9)],
+                                    remote=TierSpec("remote", float("inf"),
+                                                    0.5e9)),
+                                write_policy="back",
+                                coordinated_eviction=True)
+        r = sim.run()
+        assert r.tasks_done == len(wf.graph.tasks)
+        rep = sim.store.movement_report()
+        assert rep["pins"] == 0        # every prefetch pin was released
+
+
 class TestSimulatorPlumbing:
     def _hier(self, cap):
         return StorageHierarchy(
