@@ -1,0 +1,142 @@
+"""E9 — failure-aware durability earns its keep (ISSUE 5 tentpole).
+
+Compute-on-data-path trades durability for locality: fresh output lives only
+on the node that produced it, so a failure re-runs producers. Two sweeps
+measure what closing the durability window buys and costs:
+
+  (a) **failure rate × durability policy** (headline): the pipeline-chain
+      workload (every intermediate a sole copy) under write-back, with 0/1/2
+      node failures injected mid-run, for each policy. ``none`` re-runs every
+      dirty sole-copy producer the failure catches; ``fsync_on_barrier``
+      bounds the exposure to one barrier interval; ``flush_before_ack``
+      closes it entirely. The price shows up as fsync traffic on the demand
+      NIC lane — the io-wait delta against ``none`` at zero failures.
+
+  (b) **serving failover**: a parked session whose engine node dies is
+      re-hydrated on a surviving engine from the durable replica of its KV
+      slice — bit-identical decode, zero re-prefill — while a live-in-slot
+      session (KV = engine memory) is lost and must re-prefill.
+
+In-bench assertions (the ISSUE 5 acceptance criteria):
+  * with failures injected, ``fsync_on_barrier`` re-runs strictly fewer
+    tasks than plain write-back (``none``), and loses zero dirty objects;
+  * zero phantom-durable objects anywhere in the sweep (a cancelled flush
+    sourced on a dead node never launders lost bytes into durability);
+  * cross-engine failover saves >= 1 prefill per parked-session failure and
+    the post-failover decode is bit-identical to an unfailed control.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.configs import get_smoke
+from repro.core import HPC_CLUSTER, ProactiveScheduler, compile_workflow
+from repro.core.locstore import GiB, LocStore, tiered_hierarchy
+from repro.core.simulator import WorkflowSimulator
+from repro.core.workloads import pipeline_chain_workflow
+from repro.models import init_params
+from repro.serve.engine import Router, ServingEngine, _cache_name
+
+POLICIES = ("none", "fsync_on_barrier", "flush_before_ack")
+
+# failure schedules hit the chain mid-run (makespan ~6.4s for 4x6 chains):
+# every stage output the failure catches un-flushed is a producer re-run
+FAILURE_SCHEDULES = ((), ((4.0, 0),), ((4.0, 0), (4.5, 2)))
+
+
+def run(report, quick: bool = False) -> None:
+    # ----------------------------- (a) failure rate x durability policy
+    wf = compile_workflow(pipeline_chain_workflow(4, 6), HPC_CLUSTER)
+    schedules = FAILURE_SCHEDULES[:2] if quick else FAILURE_SCHEDULES
+    for failures in schedules:
+        results = {}
+        for pol in POLICIES:
+            sim = WorkflowSimulator(wf, ProactiveScheduler(wf), n_nodes=4,
+                                    hw=HPC_CLUSTER, write_policy="back",
+                                    durability=pol, failures=list(failures))
+            r = sim.run()
+            results[pol] = r
+            assert r.tasks_done == len(wf.graph.tasks)
+            assert r.phantom_durable == 0, \
+                f"phantom-durable object at f={len(failures)} policy={pol}"
+            assert sim.store.movement_report()["pins"] == 0, "leaked pins"
+            report(f"failures/sweep/f{len(failures)}/{pol}", 0.0,
+                   f"reruns={r.reruns} dirty_lost={r.dirty_lost} "
+                   f"fsyncs={r.fsyncs} fsync_gib={r.fsync_bytes/GiB:.2f} "
+                   f"io_wait_s={r.io_wait_total:.1f} "
+                   f"makespan_s={r.makespan:.1f} "
+                   f"phantom={r.phantom_durable} "
+                   f"aborts={r.prefetch_aborts}")
+        none, barrier = results["none"], results["fsync_on_barrier"]
+        ack = results["flush_before_ack"]
+        if failures:
+            # the acceptance criterion: a bounded window re-runs less
+            assert none.dirty_lost > 0, \
+                f"failure schedule {failures} missed all dirty data"
+            assert barrier.reruns < none.reruns, (
+                f"fsync_on_barrier did not cut reruns at f={len(failures)}: "
+                f"{barrier.reruns} !< {none.reruns}")
+            assert barrier.dirty_lost == 0 and ack.dirty_lost == 0
+            report(f"failures/sweep/f{len(failures)}/saved", 0.0,
+                   f"reruns_saved={none.reruns - barrier.reruns} "
+                   f"io_wait_cost_s="
+                   f"{barrier.io_wait_total - none.io_wait_total:.1f}")
+        else:
+            # zero failures: the policies' only effect is the fsync cost
+            assert none.fsyncs == 0 and barrier.fsyncs > 0
+
+    # --------------------------------------------- (b) serving failover
+    cfg = dataclasses.replace(get_smoke("granite-3-2b"), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    max_seq = 64
+    kv = ServingEngine(cfg, params, max_batch=2,
+                       max_seq=max_seq).slot_bytes()
+
+    def mk_store():
+        return LocStore(2, hierarchy=tiered_hierarchy(
+            hbm_bytes=2 * kv, host_bytes=2 * kv, bb_bytes=float(1 << 30)),
+            write_policy="back", durability="flush_before_ack")
+
+    # control: park/resume on one engine, no failure — the token truth
+    ctrl = ServingEngine(cfg, params, max_batch=2, max_seq=max_seq, node=0,
+                         store=mk_store())
+    sid_c = ctrl.submit([5, 6, 7])
+    for _ in range(3):
+        ctrl.step()
+    ctrl.park(sid_c)
+    ctrl.resume(sid_c)
+    for _ in range(3):
+        ctrl.step()
+    want = ctrl.sessions[sid_c].tokens[:7]
+
+    store = mk_store()
+    engines = [ServingEngine(cfg, params, max_batch=2, max_seq=max_seq,
+                             node=i, store=store) for i in range(2)]
+    router = Router(engines, store)
+    a, b = engines
+    sid = a.submit([5, 6, 7])              # parked before the failure
+    for _ in range(3):
+        a.step()
+    a.park(sid)
+    live_sid = a.submit([9, 8, 7])         # live in a slot: dies with a
+    assert store.durable(_cache_name(sid))
+    prefills_before = a.prefills + b.prefills
+    rep = router.fail_engine(0)
+    assert rep.resumed == (sid,), "the durable parked session must fail over"
+    assert rep.lost == (live_sid,), "the live slot's KV died with the engine"
+    assert a.prefills + b.prefills == prefills_before, \
+        "failover must not re-prefill"
+    for _ in range(3):
+        b.step()
+    got = b.sessions[sid].tokens[:7]
+    assert got == want, f"failover decode diverged: {got} != {want}"
+    report("failures/serving/failover", 0.0,
+           f"prefills_saved={router.failover_resumes} "
+           f"sessions_lost={router.failover_lost} "
+           f"bit_identical=1 "
+           f"kv_gib={kv/GiB:.3f}")
+    assert router.failover_resumes >= 1, \
+        "a parked-session failure must save at least one prefill"

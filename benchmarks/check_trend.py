@@ -10,11 +10,17 @@ Usage (the CI --quick job runs it right after ``run.py --quick``)::
 * **Baseline**: the highest-numbered ``BENCH_<n>.json`` committed at the repo
   root. Baselines are committed from ``--quick`` runs so CI compares like
   with like; commit a fresh ``BENCH_<n+1>.json`` per PR to ratchet.
-* **Watched metrics**: ``key=value`` tokens in a row's ``derived`` string
-  whose key mentions ``remote`` or ``io_wait`` — the two headline quantities
-  of the paper's data-movement argument (remote-PFS bytes, critical-path I/O
-  wait). Rows absent from either side, non-token formats, and near-zero
-  baselines (< EPS, where timing noise dominates) are skipped.
+* **Watched metrics**: ``key=value`` tokens in a row's ``derived`` string.
+  Keys mentioning ``remote``, ``io_wait``, ``reruns`` (failure-induced task
+  re-executions), ``dirty_lost``, or ``phantom`` are **higher-is-worse**:
+  the gate fails when current > threshold x baseline. Keys mentioning
+  ``saved`` (``reruns_saved``, ``prefills_saved`` — the durability/failover
+  wins) are **lower-is-worse**: the gate fails when current < baseline /
+  threshold. Rows absent from either side, non-token formats, and near-zero
+  baselines (< EPS, where timing noise dominates) are skipped — except that
+  a higher-is-worse metric appearing from a ~zero baseline still fails, and
+  a lower-is-worse win vanishing from a still-present row counts as
+  shrinking to zero (not as a free pass).
 * **Per-row allow-list**: a deliberate regression can be waived for exactly
   one (row, metric) pair — either ``--allow 'row/name:metric'`` on the
   command line or an entry in ``benchmarks/trend_allowlist.json``::
@@ -40,7 +46,10 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-WATCHED = ("remote", "io_wait")
+WATCHED = ("remote", "io_wait", "reruns", "dirty_lost", "phantom")
+# wins that must not shrink: checked in the opposite direction. Matched
+# FIRST — "reruns_saved" is a saving, not a rerun count.
+WATCHED_DOWN = ("saved",)
 EPS = 0.05                      # ignore baselines this small (noise floor)
 _TOKEN = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)="
                     r"([-+]?[0-9]*\.?[0-9]+(?:[eE][-+]?[0-9]+)?)(?![->\d])")
@@ -119,9 +128,17 @@ def regressions(current: list[dict], baseline: list[dict],
             continue
         cur = parse_metrics(row.get("derived", ""))
         for key, base_val in base.items():
-            if not any(w in key for w in WATCHED):
+            if any(w in key for w in WATCHED_DOWN):
+                # a win (reruns_saved, prefills_saved) must not shrink — and
+                # a win that VANISHES from the row is the maximal shrink,
+                # not a free pass
+                cur_val = cur.get(key, 0.0)
+                if base_val >= EPS and cur_val < base_val / threshold:
+                    emit(Regression(row["name"], key, base_val, cur_val))
                 continue
             if key not in cur:
+                continue
+            if not any(w in key for w in WATCHED):
                 continue
             if base_val < EPS:
                 # a ~zero baseline can't be ratioed, but traffic appearing

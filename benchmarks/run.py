@@ -11,6 +11,7 @@ results/benchmarks.json).
   E6 bench_roofline  — roofline terms per (arch × shape × mesh) dry-run cell
   E7 bench_tiers     — storage hierarchy vs flat store under capacity pressure
   E8 bench_writeback — async write-back + coordinated eviction vs write-through
+  E9 bench_failures  — durability policies under node failures + serving failover
 
 ``--quick`` runs every module at smoke scale (small shapes, few reps) — the
 CI benchmark job uses it to keep the perf trajectory alive on every push
@@ -44,12 +45,12 @@ def main() -> int:
                     help="smoke scale: small shapes / few reps (CI)")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (bench_ablation, bench_locstore, bench_prefetch,
-                            bench_roofline, bench_scheduler, bench_serving,
-                            bench_tiers, bench_writeback)
+    from benchmarks import (bench_ablation, bench_failures, bench_locstore,
+                            bench_prefetch, bench_roofline, bench_scheduler,
+                            bench_serving, bench_tiers, bench_writeback)
     modules = [bench_scheduler, bench_prefetch, bench_ablation,
                bench_locstore, bench_serving, bench_roofline, bench_tiers,
-               bench_writeback]
+               bench_writeback, bench_failures]
 
     rows: list[dict] = []
 

@@ -71,6 +71,9 @@ class _ExecCluster(ClusterView):
     def locate(self, data_name: str) -> Placement | None:
         return self.ex.store.loc.lookup(data_name)
 
+    def is_durable(self, data_name: str) -> bool:
+        return self.ex.store.durable(data_name)
+
     def link_gbps(self, src: int, dst: int) -> float:
         return self.ex.hw.link_gbps(src, dst)
 
@@ -101,22 +104,25 @@ class WorkflowExecutor:
         inject_inputs: Mapping[str, Any] | None = None,
         write_policy: str = "through",
         coordinated_eviction: bool = False,
+        durability: str = "none",
     ) -> None:
         if store is not None and hierarchy is not None:
             raise ValueError("pass either store= or hierarchy=, not both — "
                              "an explicit store already owns its hierarchy")
         if store is not None and (write_policy != "through"
-                                  or coordinated_eviction):
-            raise ValueError("write_policy/coordinated_eviction configure the "
-                             "executor-built store — an explicit store "
-                             "already owns its policies")
+                                  or coordinated_eviction
+                                  or durability != "none"):
+            raise ValueError("write_policy/coordinated_eviction/durability "
+                             "configure the executor-built store — an "
+                             "explicit store already owns its policies")
         self.wf = wf
         self.sched = scheduler
         self.hw = hw
         self.n_nodes = n_nodes
         self.store = store or LocStore(n_nodes, hierarchy=hierarchy,
                                        write_policy=write_policy,
-                                       coordinated_eviction=coordinated_eviction)
+                                       coordinated_eviction=coordinated_eviction,
+                                       durability=durability)
         self.prefetch = PrefetchEngine(self.store, device_of=device_of)
         self.cluster = _ExecCluster(self)
         self._free: set[int] = set(range(n_nodes))
@@ -180,6 +186,11 @@ class WorkflowExecutor:
                     self.store.put(oname, val,
                                    loc=pin if pin is not None else a.node,
                                    xattr={"producer": tid})
+                if self.store.durability == "fsync_on_barrier":
+                    # task finish is the executor's sync point: everything
+                    # still dirty (this task's outputs included) becomes
+                    # durable before successors are released
+                    self.store.barrier()
             except BaseException as e:  # noqa: BLE001 - propagated below
                 errors.append(e)
             self.prefetch.release(tid)

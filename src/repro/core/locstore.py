@@ -56,6 +56,30 @@ just paid to create. Pins are per (name, node) and counted (two consumers may
 pin the same replica); a fully-pinned tier stops evicting and runs overfull
 rather than dropping pinned data.
 
+**Durability windows** (``durability=``): compute-on-data-path keeps fresh
+output on the node that produced it, which means a node failure can take the
+*only* copy of a dataset down with it. The store models where in that window
+each object sits — ``durable(name)`` is True exactly when the PFS holds the
+current version — and offers three policies for closing it:
+
+* ``"none"`` (default): dirty data reaches the PFS only when capacity
+  pressure evicts it (and, under write-back, the queue drains). The window is
+  unbounded: a failure re-runs the producer.
+* ``"flush_before_ack"``: ``put`` is not acknowledged until the PFS write
+  completes (``kind="fsync"`` transfer on the producer's demand NIC lane).
+  Window = zero; cost = every byte eagerly crosses the network.
+* ``"fsync_on_barrier"``: the runtime calls :meth:`barrier` at workflow sync
+  points (task finishes, every ``barrier_every`` in the simulator); the
+  barrier fsyncs everything still dirty. Window = one barrier interval.
+
+**Failure handling** (``drop_node``): one atomic operation forgets every
+replica on the dead node, *cancels pending write-back flushes sourced on it*
+(the flush will never happen — without the cancel a later drain would mark
+the lost object durable on the strength of a phantom PFS copy), revokes the
+logical remote residency those flushes pre-recorded, and clears the node's
+pin refcounts. Objects whose last copy died are deleted so ``exists()``
+turns False and the caller can re-run the producer.
+
 Values can be anything sized: JAX arrays (``.nbytes``), numpy arrays, bytes, or
 :class:`SimObject` stand-ins for the simulator. ``get(name, at=node)`` returns
 the value AND a :class:`Transfer` record of the bytes that had to move — with
@@ -75,9 +99,11 @@ from typing import Any, Iterable, Mapping, Sequence
 __all__ = ["Placement", "SimObject", "Transfer", "TierHop", "TierSpec",
            "StorageHierarchy", "FLAT_HIERARCHY", "tiered_hierarchy",
            "LocationService", "LocStore", "REMOTE_TIER",
-           "WriteBackEntry", "WriteBackQueue", "WRITE_POLICIES"]
+           "WriteBackEntry", "WriteBackQueue", "WRITE_POLICIES",
+           "DURABILITY_POLICIES", "DropReport"]
 
 WRITE_POLICIES = ("through", "back", "around")
+DURABILITY_POLICIES = ("none", "flush_before_ack", "fsync_on_barrier")
 
 REMOTE_TIER = -1  # node id of the remote parallel-FS tier (Lustre analogue)
 
@@ -268,7 +294,8 @@ class Transfer:
     est_seconds: float = 0.0
     # fetch | demote | promote | migrate (runtime re-pin) |
     # spill (put overflow straight to the PFS) |
-    # writeback (async dirty flush) | writearound (streaming PFS write)
+    # writeback (async dirty flush) | writearound (streaming PFS write) |
+    # fsync (durability-policy flush: synchronous, ack- or barrier-blocking)
     kind: str = "fetch"
     hops: tuple[TierHop, ...] = ()
 
@@ -366,6 +393,24 @@ class WriteBackQueue:
             self.cancelled += n
             return n
 
+    def cancel_node(self, node: int) -> list[WriteBackEntry]:
+        """Tombstone every pending flush *sourced* on ``node`` (the node
+        died: the bytes will never cross the network). Returns the cancelled
+        entries so the caller can revoke the logical PFS residency each one
+        pre-recorded."""
+        with self._lock:
+            out: list[WriteBackEntry] = []
+            for e in self._q:
+                if e.node == node and e.seq not in self._cancelled:
+                    self._cancelled.add(e.seq)
+                    out.append(e)
+            self.cancelled += len(out)
+            return out
+
+    def pending_for(self, name: str) -> list[WriteBackEntry]:
+        with self._lock:
+            return [e for e in self._live() if e.name == name]
+
     def _live(self) -> list[WriteBackEntry]:
         return [e for e in self._q if e.seq not in self._cancelled]
 
@@ -389,6 +434,27 @@ class WriteBackQueue:
                     "pending": float(len(self._live())),
                     "bytes_enqueued": self.bytes_enqueued,
                     "bytes_drained": self.bytes_drained}
+
+
+@dataclasses.dataclass(frozen=True)
+class DropReport:
+    """What :meth:`LocStore.drop_node` did when a node failed.
+
+    ``lost`` names lost their last copy (the caller must re-run producers);
+    ``dirty_lost`` is the subset that was dirty — the rerun cost a tighter
+    durability window would have avoided. ``survived`` kept a replica
+    elsewhere (another node or a *real* — drained — PFS copy).
+    ``cancelled_flushes`` counts pending write-backs sourced on the dead node
+    that were tombstoned, and ``phantom_remote_revoked`` the logical PFS
+    residencies those flushes had pre-recorded but never delivered."""
+
+    node: int
+    lost: tuple[str, ...]
+    survived: tuple[str, ...]
+    dirty_lost: tuple[str, ...]
+    cancelled_flushes: int
+    phantom_remote_revoked: int
+    released_pins: int
 
 
 class LocationService:
@@ -470,7 +536,8 @@ class LocStore:
                  eviction_policy: str = "lru",
                  promote_on_access: bool = True,
                  write_policy: str = "through",
-                 coordinated_eviction: bool = False) -> None:
+                 coordinated_eviction: bool = False,
+                 durability: str = "none") -> None:
         if n_nodes < 1:
             raise ValueError("need at least one node")
         if eviction_policy not in ("lru", "cost"):
@@ -479,7 +546,11 @@ class LocStore:
             raise ValueError(f"store-wide write policy must be 'through' or "
                              f"'back', not {write_policy!r} — 'around' is "
                              f"per-object (put(..., mode='around'))")
+        if durability not in DURABILITY_POLICIES:
+            raise ValueError(f"unknown durability policy {durability!r} "
+                             f"(want one of {DURABILITY_POLICIES})")
         self.n_nodes = n_nodes
+        self.durability = durability
         self.loc = LocationService(n_meta_shards)
         self.default_policy = default_policy
         self.hierarchy = hierarchy or FLAT_HIERARCHY
@@ -525,6 +596,13 @@ class LocStore:
         self.bytes_coord_dropped = 0.0
         self.coordination_violations = 0   # a drop would have lost data (never)
         self.pin_protected_evictions = 0   # evictions a pin actually diverted
+        # durability / failure accounting
+        self.fsyncs = 0                # synchronous durability flushes
+        self.fsync_bytes = 0.0
+        self.phantom_durable = 0       # drains that would have laundered a
+        # dead node's un-flushed bytes into a "durable" PFS copy (always 0
+        # when failures go through drop_node — this is defense in depth)
+        self._failed_nodes: set[int] = set()
 
     # ------------------------------------------------------------ placement
     def _default_placement(self, name: str) -> Placement:
@@ -536,6 +614,14 @@ class LocStore:
                 self._rr += 1
         else:
             raise ValueError(f"unknown default policy {self.default_policy!r}")
+        with self._lock:
+            if self._failed_nodes:              # hash/rr must skip dead nodes
+                for _ in range(self.n_nodes):
+                    if node not in self._failed_nodes:
+                        break
+                    node = (node + 1) % self.n_nodes
+                else:
+                    raise RuntimeError("every node has failed")
         return Placement(nodes=(node,), tier=self.hierarchy.top)
 
     def _norm_loc(self, loc: Any) -> Placement:
@@ -567,6 +653,19 @@ class LocStore:
     def write_mode(self, name: str) -> str:
         """Effective write policy of one object ("through"/"back"/"around")."""
         return self._mode.get(name, self.write_policy)
+
+    def durable(self, name: str) -> bool:
+        """True when the PFS holds the *current* version of ``name`` — the
+        object would survive losing every node-local replica. A pending
+        (undrained) write-back does NOT make an object durable: the bytes
+        have not crossed the network yet."""
+        with self._lock:
+            return name in self._values and name not in self._dirty
+
+    @property
+    def failed_nodes(self) -> frozenset[int]:
+        with self._lock:
+            return frozenset(self._failed_nodes)
 
     # -------------------------------------------------- do-not-evict pinning
     def pin(self, name: str, node: int) -> None:
@@ -854,6 +953,12 @@ class LocStore:
                 entry, live = popped
                 if not live:            # tombstone: consume the slot only
                     continue
+                if entry.node in self._failed_nodes:
+                    # defense in depth: drop_node tombstones these, but a
+                    # flush sourced on a dead node must NEVER launder the
+                    # lost bytes into a "durable" PFS copy
+                    self.phantom_durable += 1
+                    continue
                 if entry.name in self._values:
                     self._dirty.discard(entry.name)
                     res = self._residency.setdefault(entry.name, {})
@@ -861,6 +966,111 @@ class LocStore:
                     self._sync_placement(entry.name)
             out.append(entry)
         return out
+
+    # ------------------------------------------------- durability / failure
+    def _fsync_object(self, name: str) -> bool:
+        """Synchronously make ``name``'s current version durable on the PFS
+        (``kind="fsync"`` transfer — the runtime charges it to the demand NIC
+        lane: an ack/barrier waits on it). Supersedes any pending async
+        flush. Caller holds the lock. Returns True if bytes moved."""
+        if name not in self._dirty or name not in self._values:
+            return False
+        res = self._residency.setdefault(name, {})
+        srcs = [n for n in res if n != REMOTE_TIER
+                and n not in self._failed_nodes]
+        if srcs:
+            src = min(srcs, key=lambda n: self.hierarchy.rank(res[n]))
+            src_tier = res[src]
+        else:
+            # writeback-evicted: the only residency is the flush's logical
+            # REMOTE promise — the bytes still sit on the evicting node's
+            # tier (that is what the queue entry records) until flushed
+            pend = [e for e in self.writeback.pending_for(name)
+                    if e.node not in self._failed_nodes]
+            if not pend:
+                return False               # no live replica to read from
+            src, src_tier = pend[0].node, pend[0].src_tier
+        nbytes = self._sizes.get(name, 0.0)
+        self.writeback.cancel(name)        # the fsync IS the flush
+        self._record_pfs_write(name, src, src_tier, nbytes, "fsync", None,
+                               read_src_tier=True)
+        res[REMOTE_TIER] = "remote"
+        self._dirty.discard(name)
+        self.fsyncs += 1
+        self.fsync_bytes += nbytes
+        self._sync_placement(name)
+        return True
+
+    def fsync(self, names: Iterable[str] | None = None) -> int:
+        """Force-flush dirty objects to the PFS (all of them, or ``names``).
+        Returns how many objects moved bytes."""
+        with self._lock:
+            todo = list(names) if names is not None else list(self._dirty)
+            return sum(self._fsync_object(n) for n in todo)
+
+    def barrier(self) -> int:
+        """The ``fsync_on_barrier`` sync point: everything dirty becomes
+        durable now. The runtime calls this at workflow barriers (simulator:
+        every ``barrier_every`` task finishes; executor: after each task's
+        outputs are put)."""
+        return self.fsync()
+
+    def drop_node(self, node: int) -> DropReport:
+        """Atomically handle the failure of ``node``.
+
+        One lock hold: (1) cancel pending write-back flushes sourced on the
+        node and revoke the logical PFS residency they pre-recorded (the
+        flush never delivered — leaving it would let a later drain mark the
+        lost object durable: the phantom-PFS-copy bug), (2) forget every
+        replica the node held, (3) clear the node's pin refcounts, then
+        delete objects whose last copy died so ``exists()`` turns False and
+        the caller can re-run producers."""
+        with self._lock:
+            self._failed_nodes.add(node)
+            lost: list[str] = []
+            survived: list[str] = []
+            dirty_lost: list[str] = []
+            # (1) in-flight flushes sourced on the dead node will never land
+            phantom = 0
+            cancelled = self.writeback.cancel_node(node)
+            for e in cancelled:
+                if e.name not in self._dirty:
+                    continue               # a later fsync already delivered
+                res = self._residency.get(e.name)
+                if res is not None and res.get(REMOTE_TIER) == "remote":
+                    del res[REMOTE_TIER]   # the promised PFS copy is a lie
+                    phantom += 1
+                    if not res:
+                        # the phantom was the only residency: the dirty
+                        # version lived nowhere but the dead node's queue
+                        lost.append(e.name)
+                        dirty_lost.append(e.name)
+            # (2) replicas on the dead node
+            for name in list(self._residency):
+                res = self._residency[name]
+                if node not in res:
+                    continue
+                self._drop_replica(name, node, res[node])
+                if res:
+                    survived.append(name)
+                elif name not in lost:
+                    lost.append(name)
+                    if name in self._dirty:
+                        dirty_lost.append(name)
+            # (3) the node's pin refcounts shield nothing anymore
+            released = 0
+            for key in [k for k in self._pins if k[1] == node]:
+                released += self._pins.pop(key)
+            for name in lost:
+                self.delete(name)          # data gone: producers must re-run
+            for name in survived:
+                self._sync_placement(name)
+        return DropReport(node=node, lost=tuple(lost),
+                          survived=tuple(survived),
+                          dirty_lost=tuple(dirty_lost),
+                          cancelled_flushes=len(cancelled),
+                          phantom_remote_revoked=phantom,
+                          released_pins=released)
 
     def _sync_placement(self, name: str) -> None:
         """Re-record the LocationService entry from the residency map."""
@@ -942,6 +1152,10 @@ class LocStore:
                 self._dirty.discard(name)    # the PFS holds this version
             else:
                 self._dirty.add(name)        # fresh data, no durable PFS copy
+                if self.durability == "flush_before_ack":
+                    # the ack is gated on durability: the PFS write happens
+                    # NOW (kind="fsync", producer's demand NIC lane)
+                    self._fsync_object(name)
             nodes = tuple(self._residency[name].keys())
             tiers = tuple(self._residency[name].values())
         final = Placement(nodes=nodes, tier=tiers[0], tiers=tiers,
@@ -1088,6 +1302,8 @@ class LocStore:
                 # the re-pin dropped the PFS replica: no durable copy anymore
                 # (a pending flush, if any, will restore one when drained)
                 self._dirty.add(name)
+                if self.durability == "flush_before_ack":
+                    self._fsync_object(name)   # the window must stay closed
             nodes = tuple(self._residency[name].keys())
             tiers = tuple(self._residency[name].values())
         final = Placement(nodes=nodes, tier=tiers[0], tiers=tiers,
@@ -1174,6 +1390,9 @@ class LocStore:
             "bytes_coord_dropped": self.bytes_coord_dropped,
             "pin_protected_evictions": float(self.pin_protected_evictions),
             "pins": float(len(self._pins)),
+            "fsyncs": float(self.fsyncs),
+            "fsync_bytes": self.fsync_bytes,
+            "phantom_durable": float(self.phantom_durable),
         }
 
     def tier_report(self, node: int | None = None
@@ -1218,3 +1437,6 @@ class LocStore:
             self.coord_drops = 0
             self.bytes_coord_dropped = 0.0
             self.pin_protected_evictions = 0
+            self.fsyncs = 0
+            self.fsync_bytes = 0.0
+            self.phantom_durable = 0

@@ -37,6 +37,11 @@ class ClusterView(Protocol):
     def free_workers(self) -> Sequence[int]: ...
     def locate(self, data_name: str) -> Placement | None: ...
     def link_gbps(self, src: int, dst: int) -> float: ...
+    def is_durable(self, data_name: str) -> bool:
+        """True when the PFS holds the current version of ``data_name`` (it
+        would survive any node failure). Views may omit this — risk-aware
+        priority then treats everything as durable (no reordering)."""
+        ...
     def worker_speed(self, node: int) -> float:
         """Relative throughput (1.0 = nominal). Stragglers report < 1."""
         ...
@@ -183,9 +188,16 @@ class LocalityScheduler(SchedulerBase):
     """
 
     def __init__(self, wf: CompiledWorkflow, *, speed_aware: bool = False,
-                 max_candidates: int = 32) -> None:
+                 max_candidates: int = 32, risk_aware: bool = False) -> None:
         super().__init__(wf)
         self.speed_aware = speed_aware
+        # [beyond-paper] durability as a scheduling signal: among equal-rank
+        # ready tasks, run the ones whose inputs are a sole, non-durable copy
+        # first — consuming at-risk data is the scheduler's contribution to
+        # shrinking the durability window the storage layer leaves open (a
+        # node failure before the consumer runs re-runs the producer; after,
+        # only the consumer's own output is exposed).
+        self.risk_aware = risk_aware
         # [beyond-paper] 1000+-node scalability: evaluating the movement cost
         # on EVERY free worker is O(N) per task. Instead score the free
         # workers that HOLD an input (locality candidates, the only nodes
@@ -212,6 +224,29 @@ class LocalityScheduler(SchedulerBase):
                 break
         return list(cands)
 
+    def _at_risk_bytes(self, tid: str, cluster: ClusterView) -> float:
+        """Bytes of ``tid``'s inputs living as a sole node-local, non-durable
+        copy — one node failure re-runs their producers (0.0 when the view
+        exposes no durability signal)."""
+        fn = getattr(cluster, "is_durable", None)
+        if fn is None:
+            return 0.0
+        total = 0.0
+        for name in self.wf.graph.tasks[tid].inputs:
+            p = cluster.locate(name)
+            if p is None:
+                continue
+            nodes = [n for n in p.nodes if n != REMOTE_TIER]
+            if len(nodes) == 1 and len(p.nodes) == 1 and not fn(name):
+                total += self.wf.sizes.get(name, 0.0)
+        return total
+
+    def _queue_key(self, tid: str, cluster: ClusterView) -> tuple:
+        """Ready-queue priority: critical path first, then (risk-aware only)
+        most at-risk bytes, then FIFO arrival."""
+        risk = self._at_risk_bytes(tid, cluster) if self.risk_aware else 0.0
+        return (-self.wf.upward_rank[tid], -risk, self._arrival[tid])
+
     def _pick_node(self, tid: str, free: list[int], cluster: ClusterView,
                    assume: dict[str, int] | None = None) -> tuple[int, float]:
         free = self._candidates(tid, free, cluster)
@@ -230,8 +265,7 @@ class LocalityScheduler(SchedulerBase):
             self.note_ready(tid)
         free = list(cluster.free_workers())
         # highest upward rank first — critical path tasks must not wait
-        queue = sorted(ready, key=lambda t: (-self.wf.upward_rank[t],
-                                             self._arrival[t]))
+        queue = sorted(ready, key=lambda t: self._queue_key(t, cluster))
         out: list[Assignment] = []
         for tid in queue:
             if not free:
@@ -261,8 +295,9 @@ class ProactiveScheduler(LocalityScheduler):
     def __init__(self, wf: CompiledWorkflow, *, speed_aware: bool = False,
                  min_inputs_ready: int = 1, horizon: int = 64,
                  prefetch_tier: str = "auto",
-                 bulk_stage_ratio: float = 1.0) -> None:
-        super().__init__(wf, speed_aware=speed_aware)
+                 bulk_stage_ratio: float = 1.0,
+                 risk_aware: bool = False) -> None:
+        super().__init__(wf, speed_aware=speed_aware, risk_aware=risk_aware)
         self.min_inputs_ready = min_inputs_ready
         self.horizon = horizon
         # "auto" = tier pinning from the compiler's est_stage_seconds (hot
@@ -337,8 +372,7 @@ class ProactiveScheduler(LocalityScheduler):
         for tid in ready:
             self.note_ready(tid)
         free = list(cluster.free_workers())
-        queue = sorted(ready, key=lambda t: (-self.wf.upward_rank[t],
-                                             self._arrival[t]))
+        queue = sorted(ready, key=lambda t: self._queue_key(t, cluster))
         out: list[Assignment] = []
         for tid in queue:
             if not free:

@@ -26,8 +26,8 @@ import heapq
 import itertools
 from typing import Callable, Mapping, Sequence
 
-from repro.core.locstore import (LocStore, Placement, REMOTE_TIER, SimObject,
-                                 StorageHierarchy)
+from repro.core.locstore import (DropReport, LocStore, Placement, REMOTE_TIER,
+                                 SimObject, StorageHierarchy)
 from repro.core.scheduler import (Assignment, ClusterView, ProactiveScheduler,
                                   SchedulerBase)
 from repro.core.wfcompiler import CompiledWorkflow, HardwareModel, TPU_V5E
@@ -55,6 +55,13 @@ class SimResult:
     clean_drops: int = 0          # free evictions (PFS already had the copy)
     coord_drops: int = 0          # free evictions (duplicate elsewhere)
     pin_protected_evictions: int = 0  # evictions a do-not-evict pin diverted
+    # durability / failure accounting
+    fsyncs: int = 0               # synchronous durability flushes
+    fsync_bytes: float = 0.0
+    dirty_lost: int = 0           # lost objects a tighter window would've kept
+    phantom_durable: int = 0      # laundered drains (must stay 0)
+    prefetch_aborts: int = 0      # in-flight transfers whose src node died
+    drop_reports: list[DropReport] = dataclasses.field(default_factory=list)
 
     @property
     def locality_hit_rate(self) -> float:
@@ -79,6 +86,11 @@ class SimResult:
             "writeback_bytes": self.writeback_bytes,
             "clean_drops": float(self.clean_drops),
             "coord_drops": float(self.coord_drops),
+            "fsyncs": float(self.fsyncs),
+            "fsync_bytes": self.fsync_bytes,
+            "dirty_lost": float(self.dirty_lost),
+            "phantom_durable": float(self.phantom_durable),
+            "prefetch_aborts": float(self.prefetch_aborts),
         }
 
 
@@ -99,6 +111,9 @@ class SimCluster(ClusterView):
 
     def locate(self, data_name: str) -> Placement | None:
         return self.store.loc.lookup(data_name)
+
+    def is_durable(self, data_name: str) -> bool:
+        return self.store.durable(data_name)
 
     def link_gbps(self, src: int, dst: int) -> float:
         return self.hw.link_gbps(src, dst)
@@ -139,6 +154,8 @@ class WorkflowSimulator:
         write_policy: str = "through",
         coordinated_eviction: bool = False,
         honor_write_modes: bool = False,
+        durability: str = "none",
+        barrier_every: int = 1,
     ) -> None:
         self.wf = wf
         self.sched = scheduler
@@ -146,7 +163,11 @@ class WorkflowSimulator:
         self.n_nodes = n_nodes
         self.store = LocStore(n_nodes, hierarchy=hierarchy,
                               write_policy=write_policy,
-                              coordinated_eviction=coordinated_eviction)
+                              coordinated_eviction=coordinated_eviction,
+                              durability=durability)
+        # fsync_on_barrier: a store barrier (flush everything dirty) fires
+        # every `barrier_every` task finishes — the workflow's sync points
+        self.barrier_every = max(int(barrier_every), 1)
         self.cluster = SimCluster(n_nodes, hw, self.store, speeds)
         self.failures = sorted(failures)
         self.proactive = (isinstance(scheduler, ProactiveScheduler)
@@ -179,6 +200,10 @@ class WorkflowSimulator:
                             for tid in wf.graph.tasks}
         state = {tid: "pending" for tid in wf.graph.tasks}  # pending|ready|running|done
         running_at: dict[str, int] = {}
+        # per-task run generation: a failure requeues the task and a new
+        # attempt may start before the OLD attempt's finish event pops — the
+        # stale event must not complete the new run early
+        run_gen: dict[str, int] = {}
         # Per-destination NIC, two priority classes: demand fetches queue only
         # behind demand; prefetch is preemptible background traffic that fills
         # idle network time (the paper pipelines "while predecessors run").
@@ -187,6 +212,9 @@ class WorkflowSimulator:
         io_wait: dict[str, float] = {}
         bytes_prefetched = 0.0
         reruns = 0
+        dirty_lost = 0
+        prefetch_aborts = 0
+        drop_reports: list[DropReport] = []
         records: dict[str, dict] = {}
         done = 0
         total = len(wf.graph.tasks)
@@ -233,7 +261,10 @@ class WorkflowSimulator:
                     continue
                 dur = (self.hw.move_seconds(tr.nbytes, tr.src, REMOTE_TIER)
                        + tr.est_seconds)
-                if tr.kind in ("demote", "spill"):
+                if tr.kind in ("demote", "spill", "fsync"):
+                    # fsync is ack/barrier-blocking by design: it rides the
+                    # demand lane, so the durability window's cost is real —
+                    # fetches queue behind the eager flush
                     nic_free[tr.src] = max(nic_free[tr.src], t0) + dur
                 elif tr.kind == "writearound":
                     nic_bg_free[tr.src] = max(nic_bg_free[tr.src], t0) + dur
@@ -261,7 +292,9 @@ class WorkflowSimulator:
             records[tid] = {"node": a.node, "assigned": t0, "start": t_inputs,
                             "finish": finish, "io_wait": t_inputs - t0,
                             "move_est": a.move_seconds}
-            heapq.heappush(events, (finish, next(seq), _TASK_FINISH, tid))
+            run_gen[tid] = run_gen.get(tid, 0) + 1
+            heapq.heappush(events, (finish, next(seq), _TASK_FINISH,
+                                    (tid, run_gen[tid])))
 
         def schedule_pass(t0: float) -> None:
             nonlocal bytes_prefetched
@@ -289,32 +322,38 @@ class WorkflowSimulator:
                     nic_bg_free[req.dst] = start + dur
                     bytes_prefetched += req.est_bytes
                     heapq.heappush(events, (start + dur, next(seq), _XFER_DONE,
-                                            (req.data_name, req.dst, dst_tier,
-                                             req.for_task)))
+                                            (req.data_name, src, req.dst,
+                                             dst_tier, req.for_task)))
 
         def fail_node(node: int, t0: float) -> None:
-            nonlocal reruns
+            nonlocal reruns, dirty_lost
+            # charge transfers issued before the failure to the NIC model
+            # first, so the lane reset below cannot erase pre-failure traffic
+            drain_eviction_traffic(t0)
             self.cluster.failed.add(node)
             self.cluster.free.discard(node)
-            # requeue the running task
+            # the dead node's NIC lanes serve nothing anymore: reset them so
+            # later accounting cannot queue behind (or charge) a dead queue
+            nic_free[node] = t0
+            nic_bg_free[node] = t0
+            # requeue the running task and release its prefetch pins — the
+            # task-finish unpin will never fire for a failure-cancelled task
             for tid, n in list(running_at.items()):
                 if n == node:
                     running_at.pop(tid)
                     state[tid] = "ready"
                     ready.add(tid)
                     reruns += 1
-            # drop lost replicas; re-run producers of fully-lost data
-            lost: list[str] = []
-            for name in self.store.loc.names():
-                p = self.store.loc.lookup(name)
-                if p and node in p.nodes:
-                    if len(p.nodes) > 1:
-                        self.store.forget_replica(name, node)
-                    else:
-                        lost.append(name)
+                    for pname, pdst in self._task_pins.pop(tid, []):
+                        self.store.unpin(pname, pdst)
+            # one atomic storage-layer drop: forget the node's replicas,
+            # cancel in-flight write-back flushes sourced on it (a later
+            # drain must not mark a lost object durable), clear its pins
+            report = self.store.drop_node(node)
+            drop_reports.append(report)
+            dirty_lost += len(report.dirty_lost)
             nonlocal done
-            for name in lost:
-                self.store.delete(name)
+            for name in report.lost:   # data gone: re-run the producers
                 prod = wf.graph.data[name].producer
                 if prod is None:       # external input: remote tier still has it
                     self.store.put(name, SimObject(wf.sizes[name]),
@@ -329,9 +368,9 @@ class WorkflowSimulator:
         while events:
             now, _, kind, payload = heapq.heappop(events)
             if kind == _TASK_FINISH:
-                tid = payload  # type: ignore[assignment]
-                if state.get(tid) != "running":    # cancelled by a failure
-                    continue
+                tid, gen = payload  # type: ignore[misc]
+                if state.get(tid) != "running" or gen != run_gen.get(tid):
+                    continue    # cancelled by a failure / stale prior attempt
                 node = running_at.pop(tid)
                 state[tid] = "done"
                 done += 1
@@ -352,9 +391,22 @@ class WorkflowSimulator:
                     if unfinished_preds[s] == 0 and state[s] == "pending":
                         state[s] = "ready"
                         ready.add(s)
+                if (self.store.durability == "fsync_on_barrier"
+                        and done % self.barrier_every == 0):
+                    # workflow sync point: close the durability window. The
+                    # fsync transfers ride the demand NIC lane (see
+                    # drain_eviction_traffic) — that contention is the cost
+                    # this policy pays for bounding the rerun exposure.
+                    self.store.barrier()
             elif kind == _XFER_DONE:
-                name, dst, dst_tier, for_task = payload  # type: ignore[misc]
-                if self.store.exists(name) and dst not in self.cluster.failed:
+                name, src, dst, dst_tier, for_task = payload  # type: ignore[misc]
+                if src in self.cluster.failed:
+                    # the source died mid-flight: the bytes never finished
+                    # crossing — without this guard a transfer could "arrive"
+                    # from a dead node and materialize a replica of data that
+                    # may no longer exist anywhere
+                    prefetch_aborts += 1
+                elif self.store.exists(name) and dst not in self.cluster.failed:
                     self.store.replicate(name, [dst], tier=dst_tier)
                     # shield the fresh replica from (coordinated) eviction
                     # until its consumer has run — prefetch work must not be
@@ -397,6 +449,12 @@ class WorkflowSimulator:
             clean_drops=int(rep["clean_drops"]),
             coord_drops=int(rep["coord_drops"]),
             pin_protected_evictions=int(rep["pin_protected_evictions"]),
+            fsyncs=int(rep["fsyncs"]),
+            fsync_bytes=rep["fsync_bytes"],
+            dirty_lost=dirty_lost,
+            phantom_durable=int(rep["phantom_durable"]),
+            prefetch_aborts=prefetch_aborts,
+            drop_reports=drop_reports,
         )
 
     def _invalidate(self, tid: str, state: dict, unfinished_preds: dict,

@@ -23,8 +23,8 @@ from repro.core.dag import TaskGraph
 from repro.core.hints import Complexity, size_hint, task
 
 __all__ = ["fig2_workflow", "mapreduce_workflow", "montage_workflow",
-           "random_layered_workflow", "serving_session_workflow",
-           "training_epoch_workflow"]
+           "pipeline_chain_workflow", "random_layered_workflow",
+           "serving_session_workflow", "training_epoch_workflow"]
 
 MB = float(1 << 20)
 GB = float(1 << 30)
@@ -158,6 +158,35 @@ def serving_session_workflow(n_sessions: int = 8, n_turns: int = 4, *,
                        inputs=(f"kv{s}_{t-1}", f"prompt{s}_{t}"),
                        outputs=(f"kv{s}_{t}",),
                        hints=task(compute=C("linear")))
+    return g
+
+
+def pipeline_chain_workflow(n_chains: int = 8, depth: int = 6, *,
+                            stage_bytes: float = 512 * MB,
+                            flops_per_byte: float = 2000.0) -> TaskGraph:
+    """Parallel deep pipelines — the failure-sensitivity stress shape.
+
+    Each chain is ``depth`` sequential stages, every intermediate consumed by
+    exactly one successor, so under compute-on-data-path each stage's output
+    is a *sole copy* on the node that produced it: losing that node before
+    the next stage reads it re-runs the producer. The rerun exposure of a
+    durability window is therefore proportional to how many stages sit
+    un-flushed when a failure hits — the quantity ``bench_failures`` sweeps.
+    A final sink joins the chains (one task; its fan-in is not the point)."""
+    C = lambda law: Complexity(law, flops_per_byte=flops_per_byte)  # noqa: E731
+    g = TaskGraph()
+    finals = []
+    for c in range(n_chains):
+        g.add_data(f"src{c}", size_bytes=size_hint(stage_bytes))
+        prev = f"src{c}"
+        for s in range(depth):
+            out = f"c{c}_s{s}"
+            g.add_task(f"stage{c}_{s}", inputs=(prev,), outputs=(out,),
+                       hints=task(compute=C("linear"), io_ratio=0.3))
+            prev = out
+        finals.append(prev)
+    g.add_task("join", inputs=tuple(finals), outputs=("final",),
+               hints=task(compute=C("linear"), io_ratio=0.05))
     return g
 
 

@@ -32,6 +32,14 @@ saturated engine is priced (media time to promote the parked cache, plus the
 demotions the promotion will cause, per ``store.tier_report(node=...)``)
 against a migrate-and-re-prefill on a free engine (the engine's *measured*
 prefill seconds), and the cheaper side wins.
+
+**Failover** (:meth:`Router.fail_engine`): when an engine node dies, the
+storage layer takes the atomic hit (``store.drop_node``) and every parked
+session whose KV slice still has a surviving replica — on another node or as
+a real (durability-policy-flushed) PFS copy — is *re-hydrated on a surviving
+engine* with a matching slot shape instead of re-prefilled; decode continues
+bit-identically. Sessions live in a slot, or parked inside an open
+durability window, are lost and need a fresh prefill.
 """
 
 from __future__ import annotations
@@ -46,7 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.locstore import LocStore
+from repro.core.locstore import DropReport, LocStore
 from repro.core.prefetch import PrefetchEngine
 from repro.models import model as M
 
@@ -80,6 +88,33 @@ class Session:
 
 def _cache_name(sid: int) -> str:
     return f"kvcache:session:{sid}"
+
+
+def _state_signature(state: Pytree) -> tuple:
+    """The slot-compatibility fingerprint: pytree structure + per-leaf shape
+    and dtype (one definition — ``slot_signature`` and ``compatible_state``
+    must never drift apart)."""
+    return (jax.tree.structure(state),
+            tuple((tuple(leaf.shape), str(leaf.dtype))
+                  for leaf in jax.tree.leaves(state)))
+
+
+@dataclasses.dataclass(frozen=True)
+class FailoverReport:
+    """What :meth:`Router.fail_engine` did when an engine node died.
+
+    ``resumed`` sessions were re-homed onto a surviving engine from the
+    surviving LocStore/PFS replica of their parked KV slice (into a slot, or
+    still parked when the engine is saturated) — each one is an entire
+    prefill NOT paid. ``lost`` sessions need a fresh prefill: they
+    were live in a slot (the authoritative KV died with the engine) or their
+    parked slice had no surviving replica (it was still inside the durability
+    window). ``drop`` is the storage layer's atomic account of the failure."""
+
+    node: int
+    resumed: tuple[int, ...]
+    lost: tuple[int, ...]
+    drop: DropReport
 
 
 class ServingEngine:
@@ -137,6 +172,21 @@ class ServingEngine:
             self._slot_nbytes = float(sum(
                 leaf.nbytes for leaf in jax.tree.leaves(self._slot_template())))
         return self._slot_nbytes
+
+    def slot_signature(self) -> tuple:
+        """Shape/dtype fingerprint of one slot's KV state — two engines can
+        exchange parked sessions iff their signatures match (same model
+        geometry and ``max_seq``)."""
+        return _state_signature(self._slot_template())
+
+    def compatible_state(self, state: Pytree) -> bool:
+        """True when ``state`` (a parked batch-1 KV slice) fits this engine's
+        slots exactly — the failover slot-shape compatibility check."""
+        try:
+            sig = _state_signature(state)
+        except Exception:  # noqa: BLE001 - foreign object: not adoptable
+            return False
+        return sig == self.slot_signature()
 
     def _cache_xattr(self, sid: int) -> dict[str, Any]:
         return {"engine": self.node, "size": self.slot_bytes(), "sid": sid}
@@ -238,6 +288,37 @@ class ServingEngine:
                 self.park(s.sid)
                 out.append(s.sid)
         return out
+
+    def adopt(self, sid: int, *, prompt_len: int, tokens: list[int]) -> bool:
+        """Take over a session parked by a FAILED engine: register it here
+        and re-hydrate it from the surviving store replica — the cross-engine
+        failover that replaces a full re-prefill. With a free slot the
+        session resumes immediately; on a saturated engine it stays PARKED
+        (a parked session needs no slot — the next follow-up resumes it).
+        Returns False (nothing registered) when the stored slice is missing,
+        still a live-session placeholder, or shaped for an incompatible
+        engine."""
+        if self.store is None or not self.store.exists(_cache_name(sid)):
+            return False
+        if sid in self.sessions:
+            raise RuntimeError(f"session {sid} already lives on engine "
+                               f"{self.node}")
+        value, _ = self.store.get(_cache_name(sid))   # metadata read
+        if not isinstance(value, KVSlice) or value.state is None \
+                or not self.compatible_state(value.state):
+            return False
+        self.sessions[sid] = Session(sid=sid, slot=None,
+                                     prompt_len=prompt_len,
+                                     tokens=list(tokens))
+        if self._free_slots:
+            self.resume(sid)
+        else:
+            # no capacity right now: the session stays parked here — re-home
+            # the cache metadata so the router routes its next turn to us
+            p = self.store.stat(_cache_name(sid))
+            p.xattr.update(self._cache_xattr(sid))
+            self.store.loc.record(_cache_name(sid), p)
+        return True
 
     def resume(self, sid: int) -> bool:
         """Bring a parked session back into a slot WITHOUT re-prefilling:
@@ -378,6 +459,8 @@ class Router:
         self.locality_evictions = 0   # hit engine full/saturated: migrated
         self.migrations = 0
         self.warmups = 0
+        self.failover_resumes = 0     # sessions re-hydrated across engines
+        self.failover_lost = 0        # sessions needing a fresh prefill
 
     # ------------------------------------------------------------ cost model
     def _resume_cost(self, eng: ServingEngine, name: str) -> float:
@@ -485,6 +568,62 @@ class Router:
             raise RuntimeError("engine full")
         new_sid = eng.submit(history)
         return eng, new_sid
+
+    # -------------------------------------------------------------- failover
+    def fail_engine(self, node: int) -> FailoverReport:
+        """Handle the death of one engine node, cross-layer.
+
+        The storage layer takes the atomic hit first (``store.drop_node``:
+        forget the node's replicas, cancel its in-flight flushes, release its
+        pins), then every non-finished session of the dead engine is triaged:
+
+        * **parked, replica survived** (another node or a real PFS copy — the
+          durability policy's doing): re-homed onto a surviving engine whose
+          slot shape matches, *without* a prefill — into a slot when one is
+          free, otherwise still parked (the next follow-up resumes it);
+        * **live in a slot** (the authoritative KV was engine memory) or
+          **parked inside the durability window** (sole replica died):
+          reported ``lost`` — the caller re-prefills from conversation
+          history if it wants the session back.
+        """
+        eng = self.engines.pop(node, None)
+        if eng is None:
+            raise KeyError(f"no engine on node {node}")
+        drop = self.store.drop_node(node)
+        resumed: list[int] = []
+        lost: list[int] = []
+        for sid, sess in list(eng.sessions.items()):
+            if sess.done:
+                continue
+            sess.done = True              # the home engine is gone either way
+            name = _cache_name(sid)
+            target: ServingEngine | None = None
+            if sess.slot is None and self.store.exists(name):
+                value, _ = self.store.get(name)         # metadata read
+                if isinstance(value, KVSlice) and value.state is not None:
+                    # most-free surviving engine with a matching slot shape —
+                    # a full engine is still a valid home: the session can
+                    # stay parked there, so capacity never forfeits a
+                    # surviving durable replica
+                    target = next(
+                        (cand for cand in sorted(self.engines.values(),
+                                                 key=lambda e:
+                                                 -len(e._free_slots))
+                         if cand.compatible_state(value.state)), None)
+            if target is not None and target.adopt(
+                    sid, prompt_len=sess.prompt_len, tokens=sess.tokens):
+                resumed.append(sid)
+                self.failover_resumes += 1
+            else:
+                lost.append(sid)
+                self.failover_lost += 1
+                if self.store.exists(name):
+                    # only unusable slices land here: a live-session
+                    # placeholder (state=None) or a slice no surviving
+                    # engine's slot shape can ever load
+                    self.store.delete(name)
+        return FailoverReport(node=node, resumed=tuple(resumed),
+                              lost=tuple(lost), drop=drop)
 
     def warm(self, sid: int) -> bool:
         """Asynchronously promote a parked session's KV back toward the top

@@ -72,6 +72,35 @@ def test_trend_checker_importable_and_selfchecks():
                                    allowed={("other", "remote_gib")})
 
 
+def test_trend_checker_direction_aware_metrics():
+    """ISSUE 5: ``reruns`` is higher-is-worse, ``*_saved`` lower-is-worse."""
+    from benchmarks import check_trend
+
+    base = [{"name": "f", "us_per_call": 0.0,
+             "derived": "reruns=1 prefills_saved=2 dirty_lost=0"}]
+    worse = [{"name": "f", "us_per_call": 0.0,
+              "derived": "reruns=5 prefills_saved=2 dirty_lost=0"}]
+    (r,) = check_trend.regressions(worse, base)
+    assert r.metric == "reruns" and r.current == 5
+    shrunk = [{"name": "f", "us_per_call": 0.0,
+               "derived": "reruns=1 prefills_saved=0 dirty_lost=0"}]
+    (r2,) = check_trend.regressions(shrunk, base)
+    assert r2.metric == "prefills_saved" and r2.current == 0
+    # dirty objects appearing from a zero baseline must fail too
+    leak = [{"name": "f", "us_per_call": 0.0,
+             "derived": "reruns=1 prefills_saved=2 dirty_lost=3"}]
+    (r3,) = check_trend.regressions(leak, base)
+    assert r3.metric == "dirty_lost"
+    # a win that vanishes from the row is the maximal shrink, not a skip
+    gone = [{"name": "f", "us_per_call": 0.0,
+             "derived": "reruns=1 dirty_lost=0"}]
+    (r4,) = check_trend.regressions(gone, base)
+    assert r4.metric == "prefills_saved" and r4.current == 0.0
+    same = [{"name": "f", "us_per_call": 0.0,
+             "derived": "reruns=1 prefills_saved=2 dirty_lost=0"}]
+    assert check_trend.regressions(same, base) == []
+
+
 def test_trend_allowlist_requires_reason(tmp_path):
     import json
 
