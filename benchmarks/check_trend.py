@@ -20,7 +20,10 @@ Usage (the CI --quick job runs it right after ``run.py --quick``)::
   baselines (< EPS, where timing noise dominates) are skipped — except that
   a higher-is-worse metric appearing from a ~zero baseline still fails, and
   a lower-is-worse win vanishing from a still-present row counts as
-  shrinking to zero (not as a free pass).
+  shrinking to zero (not as a free pass). ``sched/scale/*`` rows are
+  special: their top-level ``us_per_call`` (scheduler decision cost) is
+  gated directly, higher-is-worse — the indexed-scheduler speedup (PR 6)
+  must not erode.
 * **Per-row allow-list**: a deliberate regression can be waived for exactly
   one (row, metric) pair — either ``--allow 'row/name:metric'`` on the
   command line or an entry in ``benchmarks/trend_allowlist.json``::
@@ -50,6 +53,9 @@ WATCHED = ("remote", "io_wait", "reruns", "dirty_lost", "phantom")
 # wins that must not shrink: checked in the opposite direction. Matched
 # FIRST — "reruns_saved" is a saving, not a rerun count.
 WATCHED_DOWN = ("saved",)
+# rows whose top-level us_per_call IS the metric (not a derived token):
+# scheduler decision cost must not regress — higher is worse (PR 6)
+CALL_COST_ROWS = ("sched/scale/",)
 EPS = 0.05                      # ignore baselines this small (noise floor)
 _TOKEN = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)="
                     r"([-+]?[0-9]*\.?[0-9]+(?:[eE][-+]?[0-9]+)?)(?![->\d])")
@@ -122,10 +128,20 @@ def regressions(current: list[dict], baseline: list[dict],
         else:
             out.append(r)
 
+    base_calls = {r["name"]: float(r.get("us_per_call", 0.0))
+                  for r in baseline}
     for row in current:
         base = base_rows.get(row["name"])
         if base is None:
             continue
+        if any(row["name"].startswith(p) for p in CALL_COST_ROWS):
+            # decision-cost rows: us_per_call itself is the watched metric,
+            # direction-aware (up-bad)
+            base_val = base_calls.get(row["name"], 0.0)
+            cur_val = float(row.get("us_per_call", 0.0))
+            if base_val >= EPS and cur_val > threshold * base_val:
+                emit(Regression(row["name"], "us_per_call",
+                                base_val, cur_val))
         cur = parse_metrics(row.get("derived", ""))
         for key, base_val in base.items():
             if any(w in key for w in WATCHED_DOWN):

@@ -89,6 +89,10 @@ class _ExecCluster(ClusterView):
     def worker_speed(self, node: int) -> float:
         return 1.0
 
+    def alive_nodes(self) -> Sequence[int]:
+        # the executor has no failure model: every node is alive
+        return range(self.ex.n_nodes)
+
 
 class WorkflowExecutor:
     def __init__(
@@ -124,6 +128,14 @@ class WorkflowExecutor:
                                        coordinated_eviction=coordinated_eviction,
                                        durability=durability)
         self.prefetch = PrefetchEngine(self.store, device_of=device_of)
+        # same event wiring the simulator uses: placement mirror + move-cost
+        # term cache for decisions, and event-driven invalidation of the
+        # proactive pre-assignments/prefetch markers (a replica evicted off
+        # its prefetch target becomes re-prefetchable). Events fire on the
+        # mutating worker thread; the mirror dicts are plain dicts (atomic
+        # under the GIL), so decision reads are no racier than the direct
+        # ``loc.lookup`` they replace.
+        scheduler.attach_store(self.store, indexed=True)
         self.cluster = _ExecCluster(self)
         self._free: set[int] = set(range(n_nodes))
         self._lock = threading.RLock()

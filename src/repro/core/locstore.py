@@ -464,6 +464,21 @@ class LocationService:
     metadata server. ``shard_of`` is deterministic so any client can route a
     lookup without coordination. Counters let the benchmarks report per-shard
     load balance (the scalability argument for "distributed" in the paper).
+
+    **Change events.** ``subscribe(fn)`` registers a listener called as
+    ``fn(event, key, placement)`` on every metadata change:
+
+    * ``("record", name, placement)`` — ``name`` now resolves to ``placement``
+      (creation, replication, demotion, promotion, migration, drain, ...);
+    * ``("drop", name, None)`` — ``name`` no longer exists;
+    * ``("drop_node", node, None)`` — a whole node failed (relayed by
+      :meth:`LocStore.drop_node` after the per-name events).
+
+    This is the scheduler's cache-invalidation channel: an indexed scheduler
+    mirrors the name -> Placement map from these events instead of paying a
+    hash + shard lock per ``lookup``. Listeners run on the mutating thread
+    and may hold the store lock — they must only touch their own state and
+    never call back into the store.
     """
 
     def __init__(self, n_shards: int = 16) -> None:
@@ -472,8 +487,23 @@ class LocationService:
         self.n_shards = n_shards
         self._shards: list[dict[str, Placement]] = [{} for _ in range(n_shards)]
         self._locks = [threading.Lock() for _ in range(n_shards)]
+        self._listeners: list[Any] = []
         self.lookups = [0] * n_shards
         self.records = [0] * n_shards
+
+    def subscribe(self, fn: Any) -> None:
+        """Register ``fn(event, key, placement)`` for metadata-change events."""
+        self._listeners.append(fn)
+
+    def unsubscribe(self, fn: Any) -> None:
+        try:
+            self._listeners.remove(fn)
+        except ValueError:
+            pass
+
+    def notify(self, event: str, key: Any, placement: "Placement | None") -> None:
+        for fn in self._listeners:
+            fn(event, key, placement)
 
     def shard_of(self, name: str) -> int:
         return _stable_hash(name) % self.n_shards
@@ -483,6 +513,7 @@ class LocationService:
         with self._locks[s]:
             self._shards[s][name] = placement
             self.records[s] += 1
+        self.notify("record", name, placement)
 
     def lookup(self, name: str) -> Placement | None:
         s = self.shard_of(name)
@@ -494,6 +525,7 @@ class LocationService:
         s = self.shard_of(name)
         with self._locks[s]:
             self._shards[s].pop(name, None)
+        self.notify("drop", name, None)
 
     def names(self) -> list[str]:
         out: list[str] = []
@@ -1065,6 +1097,10 @@ class LocStore:
                 self.delete(name)          # data gone: producers must re-run
             for name in survived:
                 self._sync_placement(name)
+        # after the per-name record/drop events: one node-level event so
+        # subscribers (schedulers) can purge per-node caches — stale
+        # pre-assignments and prefetched-replica markers for the dead node
+        self.loc.notify("drop_node", node, None)
         return DropReport(node=node, lost=tuple(lost),
                           survived=tuple(survived),
                           dirty_lost=tuple(dirty_lost),

@@ -50,6 +50,30 @@ class PrefetchEngine:
         self.completed = 0
         self.skipped_read_once = 0
         self.bytes_prefetched = 0.0
+        # failure hygiene: a dead node's in-flight handles, device copies and
+        # pin records describe replicas that no longer exist — purge them on
+        # the store's drop events so a later submit() re-stages instead of
+        # returning a handle to vanished data, and release() does not unpin
+        # replicas the store already forgot.
+        store.loc.subscribe(self._on_store_event)
+
+    def _on_store_event(self, event: str, key: Any, placement: Any) -> None:
+        if event == "drop_node":
+            with self._lock:
+                for k in [k for k in self._inflight if k[1] == key]:
+                    del self._inflight[k]
+                for k in [k for k in self._device_copies if k[1] == key]:
+                    del self._device_copies[k]
+                for pins in self._pins_for.values():
+                    pins[:] = [p for p in pins if p[1] != key]
+        elif event == "drop":
+            with self._lock:
+                for k in [k for k in self._inflight if k[0] == key]:
+                    del self._inflight[k]
+                for k in [k for k in self._device_copies if k[0] == key]:
+                    del self._device_copies[k]
+                for pins in self._pins_for.values():
+                    pins[:] = [p for p in pins if p[0] != key]
 
     # ------------------------------------------------------------------ api
     def submit(self, name: str, dst: int, *, tier: str = "hbm",

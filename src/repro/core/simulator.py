@@ -21,6 +21,7 @@ of the policy, only of the cluster.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import itertools
@@ -95,7 +96,13 @@ class SimResult:
 
 
 class SimCluster(ClusterView):
-    """ClusterView over simulator state (free set, store, link model)."""
+    """ClusterView over simulator state (free set, store, link model).
+
+    ``free_workers()``/``alive_nodes()`` are cached between mutations — the
+    schedulers call them every tick, and re-sorting a 4096-entry set per call
+    was a measurable slice of per-decision cost. Mutate through
+    :meth:`acquire`/:meth:`release`/:meth:`fail` so the caches invalidate.
+    """
 
     def __init__(self, n_nodes: int, hw: HardwareModel, store: LocStore,
                  speeds: Mapping[int, float] | None = None) -> None:
@@ -105,9 +112,52 @@ class SimCluster(ClusterView):
         self.speeds = dict(speeds or {})
         self.free: set[int] = set(range(n_nodes))
         self.failed: set[int] = set()
+        self._free_cache: list[int] | None = None
+        self._alive_cache: list[int] | None = None
+        # per-source link-bandwidth rows for batched candidate scoring:
+        # bandwidths are static per HardwareModel, so each row is built once
+        self._link_rows: dict[int, tuple[list[float], float | None]] = {}
+
+    def acquire(self, node: int) -> None:
+        """A task started on ``node`` — it is no longer free."""
+        self.free.discard(node)
+        self._free_cache = None
+
+    def release(self, node: int) -> None:
+        """A task finished on ``node`` — free again unless it failed."""
+        if node not in self.failed:
+            self.free.add(node)
+            self._free_cache = None
+
+    def fail(self, node: int) -> None:
+        self.failed.add(node)
+        self.free.discard(node)
+        self._free_cache = None
+        self._alive_cache = None
 
     def free_workers(self) -> Sequence[int]:
-        return sorted(self.free - self.failed)
+        if self._free_cache is None:
+            self._free_cache = sorted(self.free - self.failed)
+        return self._free_cache
+
+    def alive_nodes(self) -> Sequence[int]:
+        if self._alive_cache is None:
+            self._alive_cache = [n for n in range(self.n_nodes)
+                                 if n not in self.failed]
+        return self._alive_cache
+
+    def link_row(self, src: int) -> tuple[list[float], float | None]:
+        info = self._link_rows.get(src)
+        if info is None:
+            row = [self.hw.link_gbps(src, dst) for dst in range(self.n_nodes)]
+            # uniform = the single off-diagonal bandwidth, if there is one
+            # (the src->src entry is inf and never consulted by the scorer)
+            vals = set(row[:src] + row[src + 1:]
+                       if 0 <= src < self.n_nodes else row)
+            uniform = vals.pop() if len(vals) == 1 else None
+            info = (row, uniform)
+            self._link_rows[src] = info
+        return info
 
     def locate(self, data_name: str) -> Placement | None:
         return self.store.loc.lookup(data_name)
@@ -156,6 +206,7 @@ class WorkflowSimulator:
         honor_write_modes: bool = False,
         durability: str = "none",
         barrier_every: int = 1,
+        indexed: bool = True,
     ) -> None:
         self.wf = wf
         self.sched = scheduler
@@ -179,6 +230,14 @@ class WorkflowSimulator:
         self.honor_write_modes = honor_write_modes
         # prefetched replicas pinned do-not-evict until their consumer runs
         self._task_pins: dict[str, list[tuple[str, int]]] = {}
+        # wire the scheduler to the store's metadata events. indexed=True
+        # turns on the incremental decision path (placement mirror, term
+        # cache, ready heap, pending-candidate index); indexed=False is the
+        # decision-identical full-rescan reference the equivalence tests
+        # compare against — the event wiring itself stays on in both modes
+        # (the proactive pre-assignment/prefetch invalidation depends on it).
+        self.indexed = indexed
+        scheduler.attach_store(self.store, indexed=indexed)
         # place external inputs: remote tier (paper's parallel FS) or scattered
         for d in wf.graph.external_inputs():
             if external_loc == "remote":
@@ -226,6 +285,71 @@ class WorkflowSimulator:
 
         def data_available(name: str) -> bool:
             return self.store.exists(name)
+
+        # -- pending-candidate index (indexed mode) -------------------------
+        # preplace() wants every PENDING task with >= 1 materialized input.
+        # The reference path rescans all tasks x inputs each tick; here we
+        # keep a per-task materialized-input count, maintained from the
+        # store's record/drop events via the dataset consumer lists, plus a
+        # bisect-sorted (graph-order, tid) list of current members — the same
+        # order ``state.items()`` yields, so preplace's stable rank sort
+        # breaks ties identically. Membership changes on: a dataset
+        # (dis)appearing (store event), a task leaving "pending" (the
+        # finish-unlock loop below), or a failure rollback (rare; we rebuild).
+        use_index = (self.indexed and self.proactive
+                     and isinstance(sched, ProactiveScheduler))
+        order = {tid: i for i, tid in enumerate(wf.graph.tasks)}
+        exists_mirror: set[str] = set()
+        avail_count: dict[str, int] = {}
+        cand_list: list[tuple[int, str]] = []
+        cand_set: set[str] = set()
+
+        def cand_check(tid: str) -> None:
+            should = state[tid] == "pending" and avail_count[tid] > 0
+            if should and tid not in cand_set:
+                cand_set.add(tid)
+                bisect.insort(cand_list, (order[tid], tid))
+            elif not should and tid in cand_set:
+                cand_set.remove(tid)
+                cand_list.remove((order[tid], tid))
+
+        def cand_rebuild() -> None:
+            """Recompute index membership from scratch (after a failure's
+            state rollbacks). avail_count stays event-maintained — exact,
+            since ``exists()`` is lookup()-is-not-None and every lookup
+            change funnels through a record/drop event."""
+            cand_list.clear()
+            cand_set.clear()
+            for tid in wf.graph.tasks:
+                if state[tid] == "pending" and avail_count[tid] > 0:
+                    cand_set.add(tid)
+                    cand_list.append((order[tid], tid))
+
+        def on_store_event(event: str, key: str, placement: object) -> None:
+            if event == "record":
+                if key not in exists_mirror:
+                    exists_mirror.add(key)
+                    d = wf.graph.data.get(key)
+                    if d is not None:
+                        for c in d.consumers:
+                            avail_count[c] += 1
+                            cand_check(c)
+            elif event == "drop":
+                if key in exists_mirror:
+                    exists_mirror.discard(key)
+                    d = wf.graph.data.get(key)
+                    if d is not None:
+                        for c in d.consumers:
+                            avail_count[c] -= 1
+                            cand_check(c)
+
+        if use_index:
+            exists_mirror.update(self.store.loc.names())
+            for tid, t in wf.graph.tasks.items():
+                avail_count[tid] = sum(1 for n in t.inputs
+                                       if n in exists_mirror)
+            cand_rebuild()
+            self.store.loc.subscribe(on_store_event)
 
         def fetch_time(name: str, dst: int, t0: float) -> float:
             """Queue one input fetch on dst's NIC; returns completion time.
@@ -282,7 +406,7 @@ class WorkflowSimulator:
             tid = a.tid
             state[tid] = "running"
             running_at[tid] = a.node
-            self.cluster.free.discard(a.node)
+            self.cluster.acquire(a.node)
             t_inputs = t0
             for name in wf.graph.tasks[tid].inputs:
                 t_inputs = max(t_inputs, fetch_time(name, a.node, t0))
@@ -304,10 +428,13 @@ class WorkflowSimulator:
                     ready.discard(a.tid)
                     start_assignment(a, t0)
             if self.proactive and isinstance(sched, ProactiveScheduler):
-                candidates = [tid for tid, st in state.items()
-                              if st == "pending"
-                              and any(data_available(n)
-                                      for n in wf.graph.tasks[tid].inputs)]
+                if use_index:
+                    candidates = [tid for _, tid in cand_list]
+                else:
+                    candidates = [tid for tid, st in state.items()
+                                  if st == "pending"
+                                  and any(data_available(n)
+                                          for n in wf.graph.tasks[tid].inputs)]
                 for req in sched.preplace(candidates, self.cluster, running_at):
                     p = self.store.loc.lookup(req.data_name)
                     if p is None or p.resident_on(req.dst):
@@ -330,8 +457,7 @@ class WorkflowSimulator:
             # charge transfers issued before the failure to the NIC model
             # first, so the lane reset below cannot erase pre-failure traffic
             drain_eviction_traffic(t0)
-            self.cluster.failed.add(node)
-            self.cluster.free.discard(node)
+            self.cluster.fail(node)
             # the dead node's NIC lanes serve nothing anymore: reset them so
             # later accounting cannot queue behind (or charge) a dead queue
             nic_free[node] = t0
@@ -363,6 +489,10 @@ class WorkflowSimulator:
                     reruns += 1
                     done -= self._invalidate(prod, state, unfinished_preds,
                                              ready, running_at)
+            if use_index:
+                # the requeue/rollback above moved tasks between pending and
+                # ready in bulk — failures are rare, recompute membership
+                cand_rebuild()
 
         schedule_pass(0.0)
         while events:
@@ -376,8 +506,7 @@ class WorkflowSimulator:
                 done += 1
                 for pname, pdst in self._task_pins.pop(tid, []):
                     self.store.unpin(pname, pdst)
-                if node not in self.cluster.failed:
-                    self.cluster.free.add(node)
+                self.cluster.release(node)
                 for out in wf.graph.tasks[tid].outputs:
                     pin = wf.graph.data[out].pinned_loc
                     loc = pin if pin is not None else node
@@ -391,6 +520,8 @@ class WorkflowSimulator:
                     if unfinished_preds[s] == 0 and state[s] == "pending":
                         state[s] = "ready"
                         ready.add(s)
+                        if use_index and s in cand_set:
+                            cand_check(s)   # left "pending": out of the index
                 if (self.store.durability == "fsync_on_barrier"
                         and done % self.barrier_every == 0):
                     # workflow sync point: close the durability window. The
@@ -423,6 +554,8 @@ class WorkflowSimulator:
             if done == total and not any(st == "running" for st in state.values()):
                 # drain queued failures/transfers without extending makespan
                 break
+        if use_index:
+            self.store.loc.unsubscribe(on_store_event)
 
         if done != total:
             missing = [t for t, st in state.items() if st != "done"]

@@ -1,0 +1,92 @@
+"""Equivalence suite for the indexed scheduler path (PR 6 tentpole).
+
+The indexed mode (placement mirror, move-cost term cache, ready-queue heap,
+event-maintained preplace eligibility, simulator candidate index) must be
+**decision-identical** to the full-rescan reference path — same assignment
+for every task, same timing, same SimResult counters, bit for bit. These
+tests run both modes on seeded workflows under the nastiest store
+configuration we have (node failures, tight tier caps forcing evictions,
+async write-back, coordinated eviction, fsync-on-barrier durability) and
+compare everything.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (FCFSScheduler, HPC_CLUSTER, LocalityScheduler,
+                        ProactiveScheduler, compile_workflow)
+from repro.core.locstore import StorageHierarchy, TierSpec
+from repro.core.simulator import WorkflowSimulator
+from repro.core.workloads import mapreduce_workflow, random_layered_workflow
+
+FAILURES = [(20.0, 1), (60.0, 3)]
+
+
+def tight_hierarchy():
+    """Per-node caps small enough that replication + prefetch force
+    evictions and write-back spills during the runs below."""
+    return StorageHierarchy(
+        [TierSpec("hbm", 6e9, 800e9), TierSpec("bb", 12e9, 10e9)],
+        remote=TierSpec("remote", float("inf"), 0.5e9))
+
+
+def build_workflow(kind):
+    if kind == "mapreduce":
+        g = mapreduce_workflow(12, 6, 2e9, flops_per_byte=4.0)
+    else:
+        g = random_layered_workflow(6, 10, seed=3, fan_in=3)
+    return compile_workflow(g, HPC_CLUSTER)
+
+
+def build_scheduler(kind, wf):
+    if kind == "proactive":
+        return ProactiveScheduler(wf, risk_aware=True)
+    if kind == "locality":
+        return LocalityScheduler(wf, speed_aware=True)
+    return FCFSScheduler(wf)
+
+
+def run_once(wf_kind, sched_kind, *, indexed, failures):
+    wf = build_workflow(wf_kind)
+    sim = WorkflowSimulator(
+        wf, build_scheduler(sched_kind, wf),
+        n_nodes=8, hw=HPC_CLUSTER, indexed=indexed,
+        failures=list(failures), hierarchy=tight_hierarchy(),
+        write_policy="back", coordinated_eviction=True,
+        durability="fsync_on_barrier")
+    return sim.run()
+
+
+def scalar_counters(result):
+    return {f.name: getattr(result, f.name)
+            for f in dataclasses.fields(result)
+            if isinstance(getattr(result, f.name), (int, float))}
+
+
+@pytest.mark.parametrize("wf_kind", ["mapreduce", "random_layered"])
+@pytest.mark.parametrize("sched_kind", ["proactive", "locality", "fcfs"])
+@pytest.mark.parametrize("with_failures", [False, True],
+                         ids=["healthy", "failures"])
+def test_indexed_path_is_decision_identical(wf_kind, sched_kind,
+                                            with_failures):
+    failures = FAILURES if with_failures else []
+    ref = run_once(wf_kind, sched_kind, indexed=False, failures=failures)
+    idx = run_once(wf_kind, sched_kind, indexed=True, failures=failures)
+    # assignment-for-assignment: node, start, finish, every recorded field
+    assert idx.task_records == ref.task_records
+    # and every scalar counter (makespan, bytes moved/local/remote,
+    # evictions, writebacks, reruns, ...) — not approximately: exactly
+    assert scalar_counters(idx) == scalar_counters(ref)
+
+
+def test_indexed_is_the_default_and_reference_is_reachable():
+    """The simulator turns the indexed path on by default; the reference
+    path stays reachable for future equivalence work."""
+    wf = build_workflow("mapreduce")
+    sim = WorkflowSimulator(wf, ProactiveScheduler(wf), n_nodes=8,
+                            hw=HPC_CLUSTER)
+    assert sim.indexed is True
+    ref = WorkflowSimulator(wf, ProactiveScheduler(wf), n_nodes=8,
+                            hw=HPC_CLUSTER, indexed=False)
+    assert ref.indexed is False

@@ -104,3 +104,77 @@ def test_speed_aware_avoids_straggler():
                           speeds={0: 0.01})
     (a,) = s.select(["split"], cluster)
     assert a.node == 1
+
+
+# ---------------------------------------------------------------- PR 6 fixes
+
+def test_preplace_without_free_workers_skips_instead_of_node0():
+    """No free worker + no alive-node signal: preplace must NOT invent a
+    pre-assignment (the old `or [0]` fallback pre-assigned node 0 even when
+    node 0 was the failed one)."""
+    wf = make_wf()
+    s = ProactiveScheduler(wf)
+    cluster = FakeCluster([], {"raw": Placement((1,))})
+    reqs = s.preplace(["split"], cluster, {})
+    assert "split" not in s.preassignment
+    assert reqs == []
+
+
+def test_preplace_without_free_workers_falls_back_to_alive_nodes():
+    class AliveCluster(FakeCluster):
+        def alive_nodes(self):
+            return [2, 3]
+
+    wf = make_wf()
+    s = ProactiveScheduler(wf)
+    cluster = AliveCluster([], {"raw": Placement((1,))})
+    s.preplace(["split"], cluster, {})
+    assert s.preassignment.get("split") in (2, 3)
+
+
+def test_store_events_invalidate_prefetch_markers_and_preassignments():
+    """A replica lost to drop_node / delete must become re-prefetchable, and
+    pre-assignments onto the dead node must not linger."""
+    from repro.core import LocStore
+
+    wf = make_wf()
+    s = ProactiveScheduler(wf)
+    store = LocStore(4)
+    s.attach_store(store)
+    store.put("raw", b"x", loc=1)
+    s._prefetched["raw"] = {1, 2}
+    s.preassignment["split"] = 2
+    store.drop_node(2)
+    assert 2 not in s._prefetched.get("raw", set())
+    assert "split" not in s.preassignment
+    store.delete("raw")
+    assert "raw" not in s._prefetched
+
+
+def test_eviction_off_prefetch_target_reopens_prefetch():
+    """Evicting the replica off its prefetch target (placement shrinks via a
+    record event) clears that node's emitted-marker."""
+    from repro.core import LocStore
+
+    wf = make_wf()
+    s = ProactiveScheduler(wf)
+    store = LocStore(4)
+    s.attach_store(store)
+    store.put("raw", b"x", loc=1)
+    store.replicate("raw", [2])
+    s._prefetched["raw"] = {2}
+    store.forget_replica("raw", 2)
+    assert 2 not in s._prefetched.get("raw", set())
+
+
+def test_fcfs_rotor_stable_within_multi_assignment_tick():
+    """The old rotor indexed a list that shrank as the loop assigned, so the
+    stride drifted toward low ids within one tick. The fixed rotor strides
+    over the tick-stable ordering: n assignments hit n distinct consecutive
+    positions, and the next tick resumes where this one stopped."""
+    wf = make_wf()
+    s = FCFSScheduler(wf)
+    a = s.select(["split", "filter_a"], FakeCluster([0, 1, 2, 3], {}))
+    assert [x.node for x in a] == [0, 1]
+    b = s.select(["filter_b", "analyze_a"], FakeCluster([0, 1, 2, 3], {}))
+    assert [x.node for x in b] == [2, 3]
