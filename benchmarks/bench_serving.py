@@ -151,7 +151,8 @@ def run(report, quick: bool = False) -> None:
                 sess = eng.sessions.get(sid)
                 if tiered:
                     try:
-                        eng, sid2 = rtr.follow_up(sid, hist[-8:])
+                        d = rtr.follow_up(sid, hist[-8:])
+                        eng, sid2 = d.engine, d.sid
                     except RuntimeError:
                         errors += 1
                         continue

@@ -1,0 +1,135 @@
+"""E10 — trace-driven serving at 10^5 sessions with tail-latency SLOs
+(PR 7 tentpole evaluation).
+
+A seeded, wall-clock-free request trace (Zipf session popularity, bursty
+arrivals, heavy-tailed lengths) is pushed through the full
+``Router``/``ServingEngine`` park/resume/warm/failover lifecycle on the
+synthetic compute backend, with service times modeled by ``CostModel`` and
+tier media speeds. Three variants, identical trace:
+
+  * **flat**         — flat pinning (no tiers, no parking). The only relief
+                       valve under memory pressure is force-finishing LRU
+                       sessions, whose follow-ups then pay full-history
+                       re-prefills.
+  * **tiered**       — park/resume through the hbm→bb→remote hierarchy.
+  * **tiered_warm**  — plus predictive warming: per-session inter-arrival
+                       EMAs schedule ``Router.warm()`` ahead of the
+                       predicted follow-up, promoting the parked KV slice
+                       back to HBM before the request lands.
+
+In-bench asserts (the PR 7 acceptance criteria): tiered + warming beats
+flat pinning on p99 TTFT under memory pressure; tiered serving takes zero
+"engine full" errors; warming produces hits and hides resume seconds.
+``check_trend`` gates ``p99_ttft_ms`` / ``p99_resume_ms`` up-bad.
+
+Full mode drives >= 10^5 sessions (~2.5e5 requests); ``--quick`` keeps CI
+at 2.5e3 sessions. A failover row kills one engine node mid-trace and
+reports resumed-elsewhere vs lost sessions.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.serve.traffic import (MiB, TraceConfig, TraceDriver,
+                                 build_trace_stack, generate_trace,
+                                 trace_stats)
+
+
+def _variant(trace, *, tiered: bool, warm: bool, n_engines: int,
+             max_batch: int, failures=(), durability: str = "none"):
+    router, store = build_trace_stack(
+        n_engines=n_engines, max_batch=max_batch, kv_bytes=64 * MiB,
+        tiered=tiered, bb_slots_per_node=96, durability=durability)
+    t0 = time.perf_counter()
+    rep = TraceDriver(router, trace, warm=warm, failures=failures).run()
+    return rep, time.perf_counter() - t0, router, store
+
+
+def _derived(s: dict, extra: str = "") -> str:
+    d = (f"requests={s['requests']} sessions={s['sessions']} "
+         f"p50_ttft={s['p50_ttft_ms']:.2f} p95_ttft={s['p95_ttft_ms']:.2f} "
+         f"p99_ttft={s['p99_ttft_ms']:.2f} p99_queue={s['p99_queue_ms']:.2f} "
+         f"p99_resume={s['p99_resume_ms']:.2f} "
+         f"engine_full_errors={s['engine_full_errors']} "
+         f"resumes={s['resumes']} migrations={s['migrations']}")
+    return f"{d} {extra}".strip()
+
+
+def run(report, quick: bool = False) -> None:
+    # rates sized to ~60% prefill utilization (mean prefill ~62 ms): bursts
+    # and memory pressure drive the tail, not a saturated queue
+    if quick:
+        n_sessions, followups, rate = 2_500, 1.2, 65.0
+        n_engines, max_batch = 4, 8
+    else:
+        n_sessions, followups, rate = 100_000, 1.5, 160.0
+        n_engines, max_batch = 8, 16
+
+    cfg = TraceConfig(n_sessions=n_sessions, followups_per_session=followups,
+                      req_rate=rate, arrival="bursty", seed=7)
+    trace = generate_trace(cfg)
+    st = trace_stats(trace)
+    report("serving_trace/trace", 0.0,
+           f"requests={st['requests']} sessions={st['sessions']} "
+           f"duration_s={st['duration']:.1f} cv_gap={st['cv_gap']:.2f} "
+           f"top1_share={st['top1_share']:.4f}")
+
+    flat, t_flat, _, _ = _variant(trace, tiered=False, warm=False,
+                                  n_engines=n_engines, max_batch=max_batch)
+    cold, t_cold, _, _ = _variant(trace, tiered=True, warm=False,
+                                  n_engines=n_engines, max_batch=max_batch)
+    warm, t_warm, router, store = _variant(trace, tiered=True, warm=True,
+                                           n_engines=n_engines,
+                                           max_batch=max_batch)
+    sf, sc, sw = flat.summary(), cold.summary(), warm.summary()
+
+    # -- the paper claims, enforced in-bench ------------------------------
+    assert sw["engine_full_errors"] == 0 and sc["engine_full_errors"] == 0, \
+        "tiered serving must absorb pressure by parking, not erroring"
+    assert sw["p99_ttft_ms"] < sf["p99_ttft_ms"], (
+        f"tiered+warm p99 TTFT {sw['p99_ttft_ms']:.2f}ms must beat flat "
+        f"pinning {sf['p99_ttft_ms']:.2f}ms under memory pressure")
+    assert sw["warm_hits"] > 0 and sw["resume_hidden_s"] > 0, \
+        "predictive warming produced no hits — Router.warm() has no caller?"
+    # a partial warm hit pays the in-flight remainder + one extra top-tier
+    # read (~0.1 ms on 64 MiB), so allow that epsilon on the p99
+    assert sw["p99_resume_ms"] <= sc["p99_resume_ms"] * 1.05, (
+        f"warming made p99 resume worse: {sw['p99_resume_ms']:.2f} > "
+        f"{sc['p99_resume_ms']:.2f}")
+    assert sf["force_finished"] > 0, \
+        "flat baseline never hit pressure — trace is undersized"
+
+    report("serving_trace/flat", t_flat * 1e6, _derived(
+        sf, f"force_finished={sf['force_finished']} "
+            f"lost_reprefills={sf['lost_reprefills']}"))
+    report("serving_trace/tiered", t_cold * 1e6, _derived(sc))
+    report("serving_trace/tiered_warm", t_warm * 1e6, _derived(
+        sw, f"warms={sw['warms']} warm_hits={sw['warm_hits']} "
+            f"warm_hit_rate={sw['warm_hit_rate']:.3f} "
+            f"wasted_warms={sw['wasted_warms']} "
+            f"resume_hidden_s={sw['resume_hidden_s']:.3f} "
+            f"bytes_promoted_gib="
+            f"{store.movement_report()['bytes_promoted'] / 2**30:.2f}"))
+
+    # -- failover mid-trace: kill one node at the halfway point -----------
+    t_mid = trace[len(trace) // 2].t
+    fo, t_fo, fo_router, _ = _variant(
+        trace, tiered=True, warm=True, n_engines=n_engines,
+        max_batch=max_batch, failures=((t_mid, 0),),
+        durability="flush_before_ack")
+    sfo = fo.summary()
+    assert len(fo_router.engines) == n_engines - 1
+    assert sfo["engine_full_errors"] == 0
+    assert sfo["failover_resumed"] > 0, \
+        "durable parks must survive the node loss and re-home"
+    report("serving_trace/failover", t_fo * 1e6, _derived(
+        sfo, f"failover_resumed={sfo['failover_resumed']} "
+             f"failover_lost={sfo['failover_lost']}"))
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/trace_summary.json", "w") as f:
+        json.dump({"trace": st, "flat": sf, "tiered": sc,
+                   "tiered_warm": sw, "failover": sfo}, f, indent=1)

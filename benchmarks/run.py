@@ -12,6 +12,8 @@ results/benchmarks.json).
   E7 bench_tiers     — storage hierarchy vs flat store under capacity pressure
   E8 bench_writeback — async write-back + coordinated eviction vs write-through
   E9 bench_failures  — durability policies under node failures + serving failover
+  E10 bench_serving_trace — 10^5-session trace replay: tail-latency SLOs
+      (p50/p95/p99 TTFT + resume), flat pinning vs tiers vs predictive warm
 
 ``--quick`` runs every module at smoke scale (small shapes, few reps) — the
 CI benchmark job uses it to keep the perf trajectory alive on every push
@@ -47,10 +49,11 @@ def main() -> int:
 
     from benchmarks import (bench_ablation, bench_failures, bench_locstore,
                             bench_prefetch, bench_roofline, bench_scheduler,
-                            bench_serving, bench_tiers, bench_writeback)
+                            bench_serving, bench_serving_trace, bench_tiers,
+                            bench_writeback)
     modules = [bench_scheduler, bench_prefetch, bench_ablation,
                bench_locstore, bench_serving, bench_roofline, bench_tiers,
-               bench_writeback, bench_failures]
+               bench_writeback, bench_failures, bench_serving_trace]
 
     rows: list[dict] = []
 

@@ -7,6 +7,7 @@ Layers (paper §B):
                + :mod:`repro.core.executor` (real) / :mod:`repro.core.simulator`
 """
 
+from repro.core.config import ServingConfig, SimConfig
 from repro.core.dag import DataSpec, TaskGraph, TaskSpec
 from repro.core.executor import WorkflowExecutor
 from repro.core.hints import Complexity, TaskHints, size_hint, task
@@ -33,5 +34,5 @@ __all__ = [
     "Assignment", "FCFSScheduler", "LocalityScheduler", "PrefetchRequest",
     "ProactiveScheduler",
     "PrefetchEngine", "WorkflowExecutor",
-    "SimResult", "WorkflowSimulator", "simulate",
+    "ServingConfig", "SimConfig", "SimResult", "WorkflowSimulator", "simulate",
 ]

@@ -1,0 +1,91 @@
+"""Frozen configuration objects for the two big entry points (PR 7).
+
+:class:`SimConfig` consolidates :class:`~repro.core.simulator.WorkflowSimulator`'s
+dozen keyword knobs; :class:`ServingConfig` does the same for the serving
+stack's :class:`~repro.serve.engine.ServingEngine` / ``Router`` constructor
+sprawl. Both entry points now take ``config=`` as the documented path while
+still accepting the legacy keywords, which are mapped through
+``from_kwargs`` — an equivalence test pins that the two spellings produce
+identical results.
+
+The dataclasses are frozen so a config can be shared across engines, stored
+on the object that consumed it, and compared/hashed in tests without
+aliasing surprises.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from repro.core.locstore import StorageHierarchy
+from repro.core.wfcompiler import HardwareModel, TPU_V5E
+
+
+def _check_known(cls: type, kw: dict) -> None:
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(kw) - known)
+    if unknown:
+        raise TypeError(f"{cls.__name__}: unknown knob(s) {unknown}; "
+                        f"known: {sorted(known)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Every :class:`WorkflowSimulator` knob in one frozen object.
+
+    ``WorkflowSimulator(wf, sched, config=SimConfig(...))`` and
+    ``simulate(wf, factory, config=...)`` are the documented spelling; the
+    legacy flat keywords still work and are routed through
+    :meth:`from_kwargs` (passing both is a ``TypeError``).
+    """
+
+    n_nodes: int = 64
+    hw: HardwareModel = TPU_V5E
+    speeds: Mapping[int, float] | None = None
+    failures: tuple[tuple[float, int], ...] = ()
+    external_loc: str = "remote"            # "remote" | "scattered"
+    proactive: bool | None = None
+    hierarchy: StorageHierarchy | None = None
+    write_policy: str = "through"
+    coordinated_eviction: bool = False
+    honor_write_modes: bool = False
+    durability: str = "none"
+    barrier_every: int = 1
+    indexed: bool = True
+
+    @classmethod
+    def from_kwargs(cls, **kw) -> "SimConfig":
+        """Map the legacy keyword spelling onto a config (TypeError on an
+        unknown knob — same failure mode the old signature had)."""
+        _check_known(cls, kw)
+        failures: Sequence[tuple[float, int]] | None = kw.get("failures")
+        if failures is not None:
+            kw["failures"] = tuple((float(t), int(n)) for t, n in failures)
+        return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Shared knobs of the serving stack: engine geometry plus the router's
+    park/pricing policy. One object configures both ``ServingEngine`` (which
+    reads the geometry fields) and ``Router`` (which reads the policy
+    fields), so the two layers can never disagree about the workload shape.
+
+    ``resume_bias`` scales the priced resume cost against the measured
+    migrate-and-re-prefill cost: > 1 makes the router migrate earlier,
+    < 1 makes it cling to locality harder. 1.0 reproduces the PR-4 pricing
+    exactly.
+    """
+
+    max_batch: int = 4
+    max_seq: int = 128
+    eos_id: int = -1
+    idle_tier: str = "bb"
+    allow_park: bool = True
+    resume_bias: float = 1.0
+
+    @classmethod
+    def from_kwargs(cls, **kw) -> "ServingConfig":
+        _check_known(cls, kw)
+        return cls(**kw)

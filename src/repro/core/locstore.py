@@ -617,6 +617,7 @@ class LocStore:
         self.bytes_demoted = 0.0
         self.demotions = 0
         self.promotions = 0
+        self.bytes_promoted = 0.0      # bytes moved up-tier (warm/prefetch wins)
         self.migrations = 0
         self.tier_reads: dict[str, float] = {}
         # write-back / coordinated-eviction accounting
@@ -1252,6 +1253,7 @@ class LocStore:
                     landed = self._admit(name, at, self.hierarchy.top)
                     if landed != src_tier:
                         self.promotions += 1
+                        self.bytes_promoted += nbytes
                         hops.append(TierHop(
                             at, src_tier, at, landed, nbytes,
                             self.hierarchy.media_seconds(nbytes, landed)))
@@ -1300,6 +1302,7 @@ class LocStore:
             if have != want:
                 if self.hierarchy.rank(want) < self.hierarchy.rank(have):
                     self.promotions += 1       # moved up-tier; down is a pin
+                    self.bytes_promoted += self._sizes.get(name, 0.0)
                 self._admit(name, node, want)
             self._sync_placement(name)
         return self.stat(name)
@@ -1415,6 +1418,7 @@ class LocStore:
             "bytes_demoted": self.bytes_demoted,
             "demotions": float(self.demotions),
             "promotions": float(self.promotions),
+            "bytes_promoted": self.bytes_promoted,
             "migrations": float(self.migrations),
             "transfers": float(len(self.transfers)),
             "writebacks": float(self.writebacks),
@@ -1430,6 +1434,16 @@ class LocStore:
             "fsync_bytes": self.fsync_bytes,
             "phantom_durable": float(self.phantom_durable),
         }
+
+    def tier_used(self, node: int, tier: str | None = None) -> float:
+        """Resident bytes in one node's ``tier`` (default: top) — the O(1)
+        admission-pressure probe. ``tier_report`` walks every replica in the
+        store to build its full per-tier table, which is fine for end-of-run
+        reporting but not for a router pricing every follow-up at 10^5
+        sessions; this reads the maintained usage counter directly."""
+        t = self.hierarchy.normalize(tier)
+        with self._lock:
+            return self._usage.get((node, t), 0.0)
 
     def tier_report(self, node: int | None = None
                     ) -> Mapping[str, Mapping[str, float]]:
@@ -1464,6 +1478,7 @@ class LocStore:
             self.bytes_demoted = 0.0
             self.demotions = 0
             self.promotions = 0
+            self.bytes_promoted = 0.0
             self.migrations = 0
             self.tier_reads.clear()
             self.writebacks = 0

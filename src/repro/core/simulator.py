@@ -27,13 +27,15 @@ import heapq
 import itertools
 from typing import Callable, Mapping, Sequence
 
+from repro.core.config import SimConfig
 from repro.core.locstore import (DropReport, LocStore, Placement, REMOTE_TIER,
-                                 SimObject, StorageHierarchy)
+                                 SimObject)
 from repro.core.scheduler import (Assignment, ClusterView, ProactiveScheduler,
                                   SchedulerBase)
-from repro.core.wfcompiler import CompiledWorkflow, HardwareModel, TPU_V5E
+from repro.core.wfcompiler import CompiledWorkflow, HardwareModel
 
-__all__ = ["SimResult", "SimCluster", "WorkflowSimulator", "simulate"]
+__all__ = ["SimConfig", "SimResult", "SimCluster", "WorkflowSimulator",
+           "simulate"]
 
 
 @dataclasses.dataclass
@@ -194,40 +196,41 @@ class WorkflowSimulator:
         wf: CompiledWorkflow,
         scheduler: SchedulerBase,
         *,
-        n_nodes: int = 64,
-        hw: HardwareModel = TPU_V5E,
-        speeds: Mapping[int, float] | None = None,
-        failures: Sequence[tuple[float, int]] = (),
-        external_loc: str = "remote",   # "remote" | "scattered"
-        proactive: bool | None = None,
-        hierarchy: StorageHierarchy | None = None,
-        write_policy: str = "through",
-        coordinated_eviction: bool = False,
-        honor_write_modes: bool = False,
-        durability: str = "none",
-        barrier_every: int = 1,
-        indexed: bool = True,
+        config: SimConfig | None = None,
+        **legacy,
     ) -> None:
+        # documented path: one frozen SimConfig. Legacy path: the original
+        # flat keywords (n_nodes=, hierarchy=, write_policy=, ...), mapped
+        # through SimConfig.from_kwargs — the pinned equivalence test proves
+        # both spellings produce identical SimResults. Mixing them is a
+        # config-aliasing bug waiting to happen, so it is rejected.
+        if config is None:
+            config = SimConfig.from_kwargs(**legacy)
+        elif legacy:
+            raise TypeError("WorkflowSimulator: pass config= OR the legacy "
+                            f"keywords, not both: {sorted(legacy)}")
+        self.config = config
         self.wf = wf
         self.sched = scheduler
-        self.hw = hw
-        self.n_nodes = n_nodes
-        self.store = LocStore(n_nodes, hierarchy=hierarchy,
-                              write_policy=write_policy,
-                              coordinated_eviction=coordinated_eviction,
-                              durability=durability)
+        self.hw = config.hw
+        self.n_nodes = config.n_nodes
+        self.store = LocStore(config.n_nodes, hierarchy=config.hierarchy,
+                              write_policy=config.write_policy,
+                              coordinated_eviction=config.coordinated_eviction,
+                              durability=config.durability)
         # fsync_on_barrier: a store barrier (flush everything dirty) fires
         # every `barrier_every` task finishes — the workflow's sync points
-        self.barrier_every = max(int(barrier_every), 1)
-        self.cluster = SimCluster(n_nodes, hw, self.store, speeds)
-        self.failures = sorted(failures)
+        self.barrier_every = max(int(config.barrier_every), 1)
+        self.cluster = SimCluster(config.n_nodes, config.hw, self.store,
+                                  config.speeds)
+        self.failures = sorted(config.failures)
         self.proactive = (isinstance(scheduler, ProactiveScheduler)
-                          if proactive is None else proactive)
+                          if config.proactive is None else config.proactive)
         # honor the compiler's per-dataset write-mode pins (pass 5): outputs
         # pinned "around" stream straight to the PFS instead of landing in
         # node tiers. Opt-in — it trades the consumer's (remote) read for
         # zero tier occupancy, which only pays off under capacity pressure.
-        self.honor_write_modes = honor_write_modes
+        self.honor_write_modes = config.honor_write_modes
         # prefetched replicas pinned do-not-evict until their consumer runs
         self._task_pins: dict[str, list[tuple[str, int]]] = {}
         # wire the scheduler to the store's metadata events. indexed=True
@@ -236,14 +239,14 @@ class WorkflowSimulator:
         # decision-identical full-rescan reference the equivalence tests
         # compare against — the event wiring itself stays on in both modes
         # (the proactive pre-assignment/prefetch invalidation depends on it).
-        self.indexed = indexed
-        scheduler.attach_store(self.store, indexed=indexed)
+        self.indexed = config.indexed
+        scheduler.attach_store(self.store, indexed=config.indexed)
         # place external inputs: remote tier (paper's parallel FS) or scattered
         for d in wf.graph.external_inputs():
-            if external_loc == "remote":
+            if config.external_loc == "remote":
                 loc = Placement(nodes=(REMOTE_TIER,), tier="remote")
             else:
-                loc = Placement(nodes=(hash(d.name) % n_nodes,))
+                loc = Placement(nodes=(hash(d.name) % config.n_nodes,))
             self.store.put(d.name, SimObject(wf.sizes[d.name]), loc=loc)
 
     # ------------------------------------------------------------------ run
@@ -618,6 +621,10 @@ class WorkflowSimulator:
 
 def simulate(wf: CompiledWorkflow,
              scheduler_factory: Callable[[CompiledWorkflow], SchedulerBase],
-             **kw) -> SimResult:
-    """One-call helper: build scheduler, run, return the result."""
-    return WorkflowSimulator(wf, scheduler_factory(wf), **kw).run()
+             *, config: SimConfig | None = None, **kw) -> SimResult:
+    """One-call helper: build scheduler, run, return the result.
+
+    ``config=SimConfig(...)`` is the documented spelling; the legacy flat
+    keywords are still accepted (but not both at once)."""
+    return WorkflowSimulator(wf, scheduler_factory(wf), config=config,
+                             **kw).run()

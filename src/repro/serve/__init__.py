@@ -1,0 +1,24 @@
+"""Serving — location-aware engines, routing, and trace-driven evaluation.
+
+The curated public surface (PR 7): engine/router machinery from
+:mod:`repro.serve.engine`, traffic generation and the discrete-event driver
+from :mod:`repro.serve.traffic`, plus the shared :class:`ServingConfig`.
+"""
+
+from repro.core.config import ServingConfig
+from repro.serve.engine import (FailoverReport, JaxComputeBackend, KVSlice,
+                                RouteDecision, Router, ServingEngine, Session)
+from repro.serve.traffic import (CostModel, InterArrivalPredictor, Request,
+                                 SyntheticBackend, TraceConfig, TraceDriver,
+                                 TraceReport, build_trace_stack,
+                                 generate_trace, latency_percentiles,
+                                 trace_stats)
+
+__all__ = [
+    "ServingConfig",
+    "FailoverReport", "JaxComputeBackend", "KVSlice", "RouteDecision",
+    "Router", "ServingEngine", "Session",
+    "CostModel", "InterArrivalPredictor", "Request", "SyntheticBackend",
+    "TraceConfig", "TraceDriver", "TraceReport", "build_trace_stack",
+    "generate_trace", "latency_percentiles", "trace_stats",
+]

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.config import ServingConfig
 from repro.core.locstore import DropReport, LocStore
 from repro.core.prefetch import PrefetchEngine
 from repro.models import model as M
@@ -99,6 +100,76 @@ def _state_signature(state: Pytree) -> tuple:
                   for leaf in jax.tree.leaves(state)))
 
 
+class JaxComputeBackend:
+    """The real model-compute backend (and the default): jitted
+    prefill/decode over the pooled decode state, slot extraction via jax
+    scatter/gather.
+
+    The engine delegates every compute- and state-layout-touching operation
+    to its backend, so the routing/park/resume/failover machinery can also be
+    driven by a compute-free stand-in (``repro.serve.traffic.SyntheticBackend``)
+    at 10^5-session scale — the storage-layer behaviour (true KV byte sizes,
+    tier residency, eviction) is identical either way.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_seq: int) -> None:
+        cfg.validate()
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self._decode = jax.jit(lambda p, s, t: M.decode_step(cfg, p, s, t))
+        self._prefill1 = jax.jit(lambda p, b: M.prefill(cfg, p, b, max_seq))
+        self._template: Pytree | None = None
+
+    def init_state(self, batch: int) -> Pytree:
+        return M.init_decode_state(self.cfg, batch, self.max_seq)
+
+    def slot_template(self) -> Pytree:
+        """Batch-1 decode state: the shape key for slot reads/writes."""
+        if self._template is None:
+            self._template = M.init_decode_state(self.cfg, 1, self.max_seq)
+        return self._template
+
+    def slot_nbytes(self) -> float:
+        """True size in bytes of one session's KV-cache slice."""
+        return float(sum(leaf.nbytes
+                         for leaf in jax.tree.leaves(self.slot_template())))
+
+    def prefill(self, params: Pytree, prompt: list[int],
+                extras: dict | None) -> tuple[int, Pytree, float]:
+        """Prefill one prompt; returns (first token, batch-1 state, measured
+        wall seconds) — the seconds feed the router's migrate pricing."""
+        batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+        batch["labels"] = batch["tokens"]
+        if self.cfg.family == "encdec":
+            e = (extras or {}).get("frames")
+            batch["frames"] = (jnp.asarray(e, jnp.bfloat16) if e is not None
+                               else jnp.zeros((1, self.cfg.n_frames,
+                                               self.cfg.d_model), jnp.bfloat16))
+        if self.cfg.family == "vlm":
+            e = (extras or {}).get("patches")
+            batch["patches"] = (jnp.asarray(e, jnp.bfloat16) if e is not None
+                                else jnp.zeros((1, self.cfg.n_patches,
+                                                self.cfg.d_model),
+                                               jnp.bfloat16))
+        t0 = time.perf_counter()
+        logits, fresh = self._prefill1(params, batch)
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        return int(jnp.argmax(logits[0, -1])), fresh, dt
+
+    def decode(self, params: Pytree, state: Pytree,
+               tokens: np.ndarray) -> tuple[np.ndarray, Pytree]:
+        """One pooled decode step; returns (argmax token per slot, state)."""
+        logits, state = self._decode(params, state, jnp.asarray(tokens))
+        return np.asarray(jnp.argmax(logits[:, -1], axis=-1)), state
+
+    def write_slot(self, pooled: Pytree, single: Pytree, slot: int) -> Pytree:
+        return _write_slot(pooled, single, slot)
+
+    def read_slot(self, pooled: Pytree, template: Pytree, slot: int) -> Pytree:
+        return _read_slot(pooled, template, slot)
+
+
 @dataclasses.dataclass(frozen=True)
 class FailoverReport:
     """What :meth:`Router.fail_engine` did when an engine node died.
@@ -117,6 +188,31 @@ class FailoverReport:
     drop: DropReport
 
 
+@dataclasses.dataclass(frozen=True)
+class RouteDecision:
+    """What :meth:`Router.follow_up` / :meth:`Router.route` decided for one
+    turn — the typed sibling of :class:`FailoverReport`.
+
+    ``kind`` is one of:
+
+    * ``"new"``        — no session id given: fresh admission;
+    * ``"hit_live"``   — locality hit, session still in its slot (free);
+    * ``"hit_parked"`` — locality hit, parked session resumed in place
+                         (storage promotion, no prefill);
+    * ``"migrate"``    — the holder was priced out (or the cache is gone):
+                         re-prefilled on another engine, ``sid`` changed.
+
+    ``resumed`` is True when a parked session was re-hydrated into a slot;
+    ``prefilled`` when the turn paid a fresh prefill.
+    """
+
+    engine: "ServingEngine"
+    sid: int
+    kind: str
+    resumed: bool = False
+    prefilled: bool = False
+
+
 class ServingEngine:
     """One engine == one node's worth of serving capacity."""
 
@@ -128,26 +224,45 @@ class ServingEngine:
     # cluster-wide LRU park victim, so per-engine clocks would make a busy
     # engine's idle sessions look fresher than a quiet engine's active one.
 
-    def __init__(self, cfg: ModelConfig, params: Pytree, *, max_batch: int = 4,
-                 max_seq: int = 128, node: int = 0,
-                 store: LocStore | None = None, eos_id: int = -1,
-                 idle_tier: str = "bb") -> None:
-        cfg.validate()
+    def __init__(self, cfg: ModelConfig | None, params: Pytree, *,
+                 config: ServingConfig | None = None, node: int = 0,
+                 store: LocStore | None = None, backend=None,
+                 max_batch: int | None = None, max_seq: int | None = None,
+                 eos_id: int | None = None, idle_tier: str | None = None,
+                 ) -> None:
+        # documented path: one frozen ServingConfig (shared with the Router).
+        # Legacy path: the original flat keywords, mapped through
+        # ServingConfig.from_kwargs. Mixing them is rejected.
+        legacy = {k: v for k, v in dict(max_batch=max_batch, max_seq=max_seq,
+                                        eos_id=eos_id,
+                                        idle_tier=idle_tier).items()
+                  if v is not None}
+        if config is None:
+            config = ServingConfig.from_kwargs(**legacy)
+        elif legacy:
+            raise TypeError("ServingEngine: pass config= OR the legacy "
+                            f"keywords, not both: {sorted(legacy)}")
+        self.config = config
         self.cfg = cfg
         self.params = params
-        self.max_batch = max_batch
-        self.max_seq = max_seq
+        self.max_batch = config.max_batch
+        self.max_seq = config.max_seq
         self.node = node
         self.store = store
-        self.eos_id = eos_id
-        self.idle_tier = idle_tier
-        self.state = M.init_decode_state(cfg, max_batch, max_seq)
+        self.eos_id = config.eos_id
+        self.idle_tier = config.idle_tier
+        if backend is None:
+            if cfg is None:
+                raise TypeError("ServingEngine: cfg=None requires an "
+                                "explicit backend=")
+            backend = JaxComputeBackend(cfg, self.max_seq)
+        self.backend = backend
+        self.state = backend.init_state(self.max_batch)
         self.sessions: dict[int, Session] = {}
-        self._free_slots = list(range(max_batch))
-        self._decode = jax.jit(
-            lambda p, s, t: M.decode_step(cfg, p, s, t))
-        self._prefill1 = jax.jit(
-            lambda p, b: M.prefill(cfg, p, b, max_seq))
+        # sessions currently holding a slot, by sid — the router's cluster-wide
+        # LRU park scan must not walk every session the engine has ever served
+        self._slotted: dict[int, Session] = {}
+        self._free_slots = list(range(self.max_batch))
         self.steps = 0
         self.prefills = 0
         self.parks = 0
@@ -155,22 +270,20 @@ class ServingEngine:
         self.rehydrates = 0
         self.prefill_seconds: float | None = None   # EMA of measured prefills
         self._clock = 0
-        self._template: Pytree | None = None        # batch-1 state skeleton
         self._slot_nbytes: float | None = None
 
     # ---------------------------------------------------------- KV geometry
     def _slot_template(self) -> Pytree:
         """Batch-1 decode state: the shape key for slot reads/writes and the
         true per-session KV byte size."""
-        if self._template is None:
-            self._template = M.init_decode_state(self.cfg, 1, self.max_seq)
-        return self._template
+        return self.backend.slot_template()
 
     def slot_bytes(self) -> float:
-        """True size in bytes of one session's KV-cache slice."""
+        """Size in bytes of one session's KV-cache slice (the backend's
+        answer — the real leaf bytes for the JAX backend, the *modeled* KV
+        size for a synthetic one; the store accounts whichever it is)."""
         if self._slot_nbytes is None:
-            self._slot_nbytes = float(sum(
-                leaf.nbytes for leaf in jax.tree.leaves(self._slot_template())))
+            self._slot_nbytes = float(self.backend.slot_nbytes())
         return self._slot_nbytes
 
     def slot_signature(self) -> tuple:
@@ -210,33 +323,17 @@ class ServingEngine:
             raise RuntimeError("engine full")
         slot = self._free_slots.pop()
         sid = next(ServingEngine._SID)
-        batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
-        batch["labels"] = batch["tokens"]
-        if self.cfg.family == "encdec":
-            e = (extras or {}).get("frames")
-            batch["frames"] = (jnp.asarray(e, jnp.bfloat16) if e is not None
-                               else jnp.zeros((1, self.cfg.n_frames,
-                                               self.cfg.d_model), jnp.bfloat16))
-        if self.cfg.family == "vlm":
-            e = (extras or {}).get("patches")
-            batch["patches"] = (jnp.asarray(e, jnp.bfloat16) if e is not None
-                                else jnp.zeros((1, self.cfg.n_patches,
-                                                self.cfg.d_model),
-                                               jnp.bfloat16))
-        t0 = time.perf_counter()
-        logits, fresh = self._prefill1(self.params, batch)
-        logits = jax.block_until_ready(logits)
-        dt = time.perf_counter() - t0
+        first, fresh, dt = self.backend.prefill(self.params, prompt, extras)
         # measured prefill cost — the router prices migrations with this
         self.prefill_seconds = (dt if self.prefill_seconds is None
                                 else 0.5 * self.prefill_seconds + 0.5 * dt)
         self.prefills += 1
         # copy the single-session state into this slot of the pooled state
-        self.state = _write_slot(self.state, fresh, slot)
-        first = int(jnp.argmax(logits[0, -1]))
+        self.state = self.backend.write_slot(self.state, fresh, slot)
         sess = Session(sid=sid, slot=slot, prompt_len=len(prompt),
                        tokens=[first])
         self.sessions[sid] = sess
+        self._slotted[sid] = sess
         self._touch(sess)
         if self.store is not None:
             # live session: a correctly-SIZED placeholder pinned in the top
@@ -259,22 +356,22 @@ class ServingEngine:
             raise RuntimeError(f"session {sid} already finished")
         if s.slot is None:
             return                                   # already parked
-        state = _read_slot(self.state, self._slot_template(), s.slot)
+        state = self.backend.read_slot(self.state, self._slot_template(),
+                                       s.slot)
         self.store.put(_cache_name(sid), KVSlice(state, self.slot_bytes()),
                        loc=self.node, tier=self.idle_tier,
                        xattr=self._cache_xattr(sid))
         self._free_slots.append(s.slot)
         s.slot = None
+        self._slotted.pop(sid, None)
         self.parks += 1
 
     def park_lru(self) -> int | None:
         """Park the least-recently-active slotted session (to make room).
         Returns its sid, or None when no session can be parked."""
-        live = [s for s in self.sessions.values()
-                if not s.done and s.slot is not None]
-        if not live or self.store is None:
+        if not self._slotted or self.store is None:
             return None
-        victim = min(live, key=lambda s: s.last_active)
+        victim = min(self._slotted.values(), key=lambda s: s.last_active)
         self.park(victim.sid)
         return victim.sid
 
@@ -282,9 +379,8 @@ class ServingEngine:
         """Park every session idle for more than ``max_idle`` activity ticks
         (the serving loop's idle-demotion sweep). Returns parked sids."""
         out = []
-        for s in list(self.sessions.values()):
-            if (not s.done and s.slot is not None
-                    and self._clock - s.last_active > max_idle):
+        for s in list(self._slotted.values()):
+            if not s.done and self._clock - s.last_active > max_idle:
                 self.park(s.sid)
                 out.append(s.sid)
         return out
@@ -337,8 +433,9 @@ class ServingEngine:
         if not isinstance(value, KVSlice) or value.state is None:
             raise RuntimeError(f"session {sid} has no parked KV state")
         slot = self._free_slots.pop()
-        self.state = _write_slot(self.state, value.state, slot)
+        self.state = self.backend.write_slot(self.state, value.state, slot)
         s.slot = slot
+        self._slotted[sid] = s
         self._touch(s)
         self.resumes += 1
         self.rehydrates += 1
@@ -351,18 +448,15 @@ class ServingEngine:
     # ---------------------------------------------------------------- decode
     def step(self) -> dict[int, int]:
         """One decode step for every live session; returns {sid: new_token}."""
-        live = [s for s in self.sessions.values()
-                if not s.done and s.slot is not None]
+        live = [s for s in self._slotted.values() if not s.done]
         if not live:
             return {}
         tokens = np.zeros((self.max_batch, 1), np.int32)
         for s in live:
             tokens[s.slot, 0] = s.tokens[-1]
-        logits, self.state = self._decode(self.params, self.state,
-                                          jnp.asarray(tokens))
+        arg, self.state = self.backend.decode(self.params, self.state, tokens)
         self.steps += 1
         out: dict[int, int] = {}
-        arg = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for s in live:
             tok = int(arg[s.slot])
             s.tokens.append(tok)
@@ -380,6 +474,7 @@ class ServingEngine:
             if s.slot is not None:
                 self._free_slots.append(s.slot)
                 s.slot = None
+            self._slotted.pop(sid, None)
             if self.store is not None:
                 self.store.delete(_cache_name(sid))
         return s.tokens
@@ -449,11 +544,18 @@ class Router:
 
     def __init__(self, engines: list[ServingEngine], store: LocStore, *,
                  prefetch: PrefetchEngine | None = None,
-                 allow_park: bool = True) -> None:
+                 config: ServingConfig | None = None,
+                 allow_park: bool | None = None) -> None:
+        if config is None:
+            config = ServingConfig(
+                allow_park=True if allow_park is None else allow_park)
+        elif allow_park is not None:
+            raise TypeError("Router: pass config= OR allow_park=, not both")
+        self.config = config
         self.engines = {e.node: e for e in engines}
         self.store = store
         self.prefetch = prefetch
-        self.allow_park = allow_park
+        self.allow_park = config.allow_park
         self.locality_hits = 0
         self.locality_misses = 0
         self.locality_evictions = 0   # hit engine full/saturated: migrated
@@ -478,8 +580,7 @@ class Router:
             # a victim session must be parked first (top read + idle write)
             cost += (hier.media_seconds(kv, hier.top)
                      + hier.media_seconds(kv, idle_tier))
-        top_used = self.store.tier_report(node=eng.node)[hier.top][
-            "resident_bytes"]
+        top_used = self.store.tier_used(eng.node, hier.top)
         if top_used + kv > hier.capacity(hier.top):
             # promotion at pressure: the store will demote someone else
             cost += hier.media_seconds(kv, idle_tier)
@@ -509,10 +610,9 @@ class Router:
                 # parked: needs a slot. Full + no parkable victim, or a
                 # migrate priced cheaper than the promotion -> fall through.
                 can_serve = (eng.can_admit()
-                             or (self.allow_park
-                                 and any(s.slot is not None and not s.done
-                                         for s in eng.sessions.values())))
-                if can_serve and (self._resume_cost(eng, _cache_name(sid))
+                             or (self.allow_park and bool(eng._slotted)))
+                if can_serve and (self.config.resume_bias
+                                  * self._resume_cost(eng, _cache_name(sid))
                                   <= self._migrate_cost(eng)):
                     self.locality_hits += 1
                     return eng
@@ -524,13 +624,10 @@ class Router:
         if not free:
             if self.allow_park:
                 # park the least-recently-active session cluster-wide
-                candidates = [e for e in self.engines.values()
-                              if any(s.slot is not None and not s.done
-                                     for s in e.sessions.values())]
+                candidates = [e for e in self.engines.values() if e._slotted]
                 if candidates:
                     eng = min(candidates, key=lambda e: min(
-                        s.last_active for s in e.sessions.values()
-                        if s.slot is not None and not s.done))
+                        s.last_active for s in e._slotted.values()))
                     eng.park_lru()
                     return eng
             raise RuntimeError("all engines full")
@@ -547,17 +644,29 @@ class Router:
                 raise RuntimeError("engine full")
         return eng.resume(sid)
 
-    def follow_up(self, sid: int, history: list[int]
-                  ) -> tuple[ServingEngine, int]:
-        """Route one follow-up turn end-to-end. On a locality hit the session
-        is resumed in place (no prefill); otherwise it migrates: the old
-        engine drops it and the target re-prefills ``history``. Returns
-        (engine, sid) — the sid changes on a migration."""
+    def route(self, sid: int | None = None) -> RouteDecision:
+        """The typed routing decision for one turn: which engine, which kind
+        of hit, without side effects beyond what ``engine_for`` does (park a
+        cluster-wide LRU victim to make room). ``follow_up`` executes it."""
         eng = self.engine_for(sid)
+        if sid is None:
+            return RouteDecision(engine=eng, sid=-1, kind="new")
         sess = eng.sessions.get(sid)
         if sess is not None and not sess.done:
-            self.ensure_active(eng, sid)
-            return eng, sid
+            kind = "hit_live" if sess.slot is not None else "hit_parked"
+            return RouteDecision(engine=eng, sid=sid, kind=kind)
+        return RouteDecision(engine=eng, sid=sid, kind="migrate")
+
+    def follow_up(self, sid: int, history: list[int]) -> RouteDecision:
+        """Route one follow-up turn end-to-end. On a locality hit the session
+        is resumed in place (no prefill); otherwise it migrates: the old
+        engine drops it and the target re-prefills ``history``. Returns a
+        :class:`RouteDecision` — ``decision.sid`` changes on a migration."""
+        d = self.route(sid)
+        eng = d.engine
+        if d.kind in ("hit_live", "hit_parked"):
+            resumed = self.ensure_active(eng, sid)
+            return dataclasses.replace(d, resumed=resumed)
         # migration: the cache holder (if any) discards its copy
         for e in self.engines.values():
             s = e.sessions.get(sid)
@@ -567,7 +676,7 @@ class Router:
         if not eng.can_admit():     # engine_for made room already unless flat
             raise RuntimeError("engine full")
         new_sid = eng.submit(history)
-        return eng, new_sid
+        return dataclasses.replace(d, sid=new_sid, prefilled=True)
 
     # -------------------------------------------------------------- failover
     def fail_engine(self, node: int) -> FailoverReport:
@@ -626,17 +735,31 @@ class Router:
                               lost=tuple(lost), drop=drop)
 
     def warm(self, sid: int) -> bool:
-        """Asynchronously promote a parked session's KV back toward the top
-        tier ahead of its next turn (the serving analogue of the proactive
-        prefetch). No-op without a prefetch engine or for live sessions."""
-        if self.prefetch is None or not self.store.exists(_cache_name(sid)):
+        """Promote a parked session's KV back toward the top tier ahead of
+        its next turn (the serving analogue of the proactive prefetch) — the
+        predictive-warming driver (``repro.serve.traffic``) calls this ahead
+        of each predicted follow-up. With a :class:`PrefetchEngine` attached
+        the promotion runs on its background thread; without one it happens
+        synchronously in the store (wall-clock-free — the trace driver models
+        the media time itself). No-op for unknown, finished, or live-in-slot
+        sessions, and for slices whose only replica is off-node (remote/other
+        node): those resume through the normal ``get(at=...)`` path."""
+        name = _cache_name(sid)
+        if not self.store.exists(name):
             return False
-        node = self.store.getxattr(_cache_name(sid), "engine")
+        node = self.store.getxattr(name, "engine")
         eng = self.engines.get(node)
         sess = eng.sessions.get(sid) if eng is not None else None
         if sess is None or sess.done or sess.slot is not None:
             return False
-        self.prefetch.submit(_cache_name(sid), node,
-                             tier=self.store.hierarchy.top)
+        if self.prefetch is not None:
+            self.prefetch.submit(name, node, tier=self.store.hierarchy.top)
+            self.warmups += 1
+            return True
+        p = self.store.stat(name)
+        if not p.resident_on(node):
+            return False
+        if p.tier_on(node) != self.store.hierarchy.top:
+            self.store.promote(name, node, tier=self.store.hierarchy.top)
         self.warmups += 1
         return True

@@ -1,0 +1,124 @@
+"""Config-object API (PR 7 satellites): ``SimConfig`` / ``ServingConfig``.
+
+The load-bearing guarantee is *equivalence*: the legacy flat-keyword
+spelling and the new ``config=`` spelling must drive the exact same code
+paths, pinned by comparing full ``SimResult``s field by field. Plus the
+contract edges: unknown knobs raise ``TypeError`` (as the old signatures
+did), and passing ``config=`` together with legacy keywords is rejected.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import (HPC_CLUSTER, LocalityScheduler, ProactiveScheduler,
+                        ServingConfig, SimConfig, compile_workflow)
+from repro.core.locstore import GiB, tiered_hierarchy
+from repro.core.simulator import WorkflowSimulator, simulate
+from repro.core.workloads import montage_workflow
+from repro.serve.engine import Router, ServingEngine
+from repro.serve.traffic import MiB, SyntheticBackend
+
+
+def _wf():
+    return compile_workflow(montage_workflow(width=12), HPC_CLUSTER)
+
+
+def _same_result(a, b) -> None:
+    da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+    assert da == db, {k: (da[k], db[k]) for k in da if da[k] != db[k]}
+
+
+# ------------------------------------------------------------------ SimConfig
+def test_simconfig_equivalent_to_legacy_kwargs_basic():
+    legacy = WorkflowSimulator(_wf(), LocalityScheduler(_wf()), n_nodes=4,
+                               hw=HPC_CLUSTER, external_loc="scattered").run()
+    cfg = SimConfig(n_nodes=4, hw=HPC_CLUSTER, external_loc="scattered")
+    new = WorkflowSimulator(_wf(), LocalityScheduler(_wf()), config=cfg).run()
+    _same_result(legacy, new)
+
+
+def test_simconfig_equivalent_under_tiers_writeback_durability_failures():
+    """The heavyweight knobs — tiered hierarchy, write-back, durability
+    windows, mid-run failures — all route identically through the config."""
+    kw = dict(
+        n_nodes=4, hw=HPC_CLUSTER,
+        hierarchy=tiered_hierarchy(hbm_bytes=0.5 * GiB, host_bytes=1 * GiB,
+                                   bb_bytes=2 * GiB),
+        write_policy="back", coordinated_eviction=True,
+        honor_write_modes=True, durability="fsync_on_barrier", barrier_every=2,
+        failures=[(5.0, 1)], proactive=True, indexed=False,
+    )
+    legacy = WorkflowSimulator(_wf(), ProactiveScheduler(_wf()), **kw).run()
+    new = WorkflowSimulator(_wf(), ProactiveScheduler(_wf()),
+                            config=SimConfig.from_kwargs(**kw)).run()
+    _same_result(legacy, new)
+    assert legacy.reruns + new.reruns > 0 or legacy.drop_reports
+
+
+def test_simconfig_from_kwargs_normalizes_failures():
+    cfg = SimConfig.from_kwargs(failures=[(1.0, 0)])
+    assert cfg.failures == ((1.0, 0),)
+    assert hash(cfg) == hash(SimConfig(failures=((1.0, 0),)))
+
+
+def test_simconfig_unknown_knob_raises():
+    with pytest.raises(TypeError, match="unknown knob"):
+        SimConfig.from_kwargs(n_noodles=4)
+    with pytest.raises(TypeError, match="unknown knob"):
+        WorkflowSimulator(_wf(), LocalityScheduler(_wf()), n_noodles=4)
+
+
+def test_simconfig_xor_legacy_kwargs():
+    with pytest.raises(TypeError, match="config"):
+        WorkflowSimulator(_wf(), LocalityScheduler(_wf()),
+                          config=SimConfig(), n_nodes=4)
+
+
+def test_simulate_accepts_config():
+    cfg = SimConfig(n_nodes=4, hw=HPC_CLUSTER)
+    legacy = simulate(_wf(), LocalityScheduler, n_nodes=4, hw=HPC_CLUSTER)
+    new = simulate(_wf(), LocalityScheduler, config=cfg)
+    _same_result(legacy, new)
+    sim = WorkflowSimulator(_wf(), LocalityScheduler(_wf()), config=cfg)
+    assert sim.config is cfg                 # the consumed config is kept
+
+
+# -------------------------------------------------------------- ServingConfig
+def test_servingconfig_equivalent_to_legacy_kwargs():
+    be = SyntheticBackend(kv_bytes=MiB)
+    legacy = ServingEngine(None, None, backend=be, max_batch=3, max_seq=64,
+                           eos_id=9, idle_tier="host")
+    cfg = ServingConfig(max_batch=3, max_seq=64, eos_id=9, idle_tier="host")
+    new = ServingEngine(None, None, backend=be, config=cfg)
+    assert (legacy.max_batch, legacy.max_seq, legacy.eos_id,
+            legacy.idle_tier) == (3, 64, 9, "host")
+    assert (new.max_batch, new.max_seq, new.eos_id, new.idle_tier) \
+        == (legacy.max_batch, legacy.max_seq, legacy.eos_id, legacy.idle_tier)
+
+
+def test_servingconfig_xor_and_unknown():
+    be = SyntheticBackend(kv_bytes=MiB)
+    with pytest.raises(TypeError, match="config"):
+        ServingEngine(None, None, backend=be, config=ServingConfig(),
+                      max_batch=3)
+    with pytest.raises(TypeError, match="unknown knob"):
+        ServingConfig.from_kwargs(max_batches=3)
+
+
+def test_router_config_xor_allow_park():
+    from repro.core.locstore import LocStore
+    store = LocStore(1)
+    eng = ServingEngine(None, None, backend=SyntheticBackend(kv_bytes=MiB),
+                        node=0, store=store)
+    with pytest.raises(TypeError, match="config"):
+        Router([eng], store, config=ServingConfig(), allow_park=True)
+    rtr = Router([eng], store, config=ServingConfig(allow_park=False))
+    assert rtr.allow_park is False
+
+
+def test_configs_frozen():
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        SimConfig().n_nodes = 8
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ServingConfig().max_batch = 8

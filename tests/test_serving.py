@@ -219,8 +219,9 @@ def test_router_full_engine_locality_hit_falls_through(setup):
     assert router.locality_hits == 0
     # follow_up completes the migration without an 'engine full' error
     hist = list(e0.sessions[sid].tokens)
-    eng, new_sid = router.follow_up(sid, hist)
-    assert eng is e1 and new_sid != sid
+    d = router.follow_up(sid, hist)
+    assert d.engine is e1 and d.sid != sid
+    assert d.kind == "migrate" and d.prefilled and not d.resumed
     assert router.migrations == 1
     assert e0.sessions[sid].done     # the holder dropped the stale session
     assert e0.sessions[blocker].slot is not None    # blocker untouched
@@ -241,8 +242,9 @@ def test_router_resumes_parked_session_by_parking_victim(setup):
     e0.park(sid)
     blocker = e0.submit([9, 9])
     prefills = e0.prefills
-    eng, same_sid = router.follow_up(sid, [1, 2, 3])
-    assert eng is e0 and same_sid == sid
+    d = router.follow_up(sid, [1, 2, 3])
+    assert d.engine is e0 and d.sid == sid
+    assert d.kind == "hit_parked" and d.resumed and not d.prefilled
     assert e0.sessions[sid].slot is not None         # re-hydrated
     assert e0.sessions[blocker].slot is None         # victim parked
     assert e0.prefills == prefills                   # no re-prefill

@@ -1,0 +1,237 @@
+"""Trace generator + trace-driven serving driver (PR 7 tentpole).
+
+Generator: seeded determinism, Zipf-skew and arrival-rate statistical
+sanity, percentile math on known fixtures. Driver: the full
+park/resume/warm/failover lifecycle on the synthetic backend — zero
+engine-full errors under pressure, predictive warming hiding resume
+latency, flat pinning losing on tail TTFT, and bit-identical reruns.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve.engine import ServingEngine
+from repro.serve.traffic import (InterArrivalPredictor, MiB,
+                                 SyntheticBackend, TraceConfig, TraceDriver,
+                                 build_trace_stack, generate_trace,
+                                 latency_percentiles, trace_stats)
+
+
+# ----------------------------------------------------------------- generator
+def test_trace_seeded_determinism():
+    cfg = TraceConfig(n_sessions=300, seed=11, arrival="bursty")
+    assert generate_trace(cfg) == generate_trace(cfg)
+    other = generate_trace(TraceConfig(n_sessions=300, seed=12,
+                                       arrival="bursty"))
+    assert other != generate_trace(cfg)
+
+
+def test_trace_structure_invariants():
+    cfg = TraceConfig(n_sessions=400, followups_per_session=2.0, seed=3)
+    trace = generate_trace(cfg)
+    assert len(trace) == 400 + 800
+    # every session opens with turn 0, turns are consecutive, exactly one
+    # final per session, and times are sorted
+    seen: dict[int, int] = {}
+    finals: dict[int, int] = {}
+    last_t = 0.0
+    for r in trace:
+        assert r.t >= last_t
+        last_t = r.t
+        expect = seen.get(r.session, -1) + 1
+        assert r.turn == expect
+        seen[r.session] = r.turn
+        if r.final:
+            finals[r.session] = finals.get(r.session, 0) + 1
+        assert 1 <= r.prompt_len <= cfg.max_prompt
+        assert 1 <= r.output_len <= cfg.max_output
+    assert len(seen) == 400                      # all sessions distinct+used
+    assert all(v == 1 for v in finals.values()) and len(finals) == 400
+
+
+def test_zipf_skew_and_arrival_rate():
+    cfg = TraceConfig(n_sessions=2000, followups_per_session=3.0,
+                      req_rate=500.0, zipf_alpha=1.2, seed=5)
+    st = trace_stats(generate_trace(cfg))
+    # Poisson arrivals: mean gap ~ 1/rate, CV ~ 1
+    assert st["mean_gap"] == pytest.approx(1 / 500.0, rel=0.1)
+    assert 0.9 < st["cv_gap"] < 1.1
+    # Zipf: the hottest session gets far more than the uniform 1/N share,
+    # and the top decile dominates
+    uniform_share = 1.0 / 2000
+    assert st["top1_share"] > 20 * uniform_share
+    assert st["top10pct_share"] > 0.35
+
+
+def test_bursty_arrivals_overdispersed():
+    base = TraceConfig(n_sessions=3000, req_rate=300.0, seed=9)
+    poisson = trace_stats(generate_trace(base))
+    bursty = trace_stats(generate_trace(
+        dataclass_replace(base, arrival="bursty", burst_factor=12.0,
+                          burst_fraction=0.15)))
+    # burstiness shows up as gap overdispersion; long-run rate is preserved
+    assert bursty["cv_gap"] > poisson["cv_gap"] + 0.05
+    assert bursty["mean_gap"] == pytest.approx(1 / 300.0, rel=0.15)
+
+
+def dataclass_replace(cfg, **kw):
+    import dataclasses
+    return dataclasses.replace(cfg, **kw)
+
+
+def test_heavy_tailed_lengths():
+    cfg = TraceConfig(n_sessions=3000, followups_per_session=0.0,
+                      prompt_sigma=1.0, seed=2)
+    lens = np.array([r.prompt_len for r in generate_trace(cfg)])
+    assert np.percentile(lens, 99) > 3 * np.median(lens)
+
+
+def test_percentiles_on_fixture():
+    vals = list(range(100))                      # 0..99
+    p = latency_percentiles(vals)
+    assert p["p50"] == pytest.approx(49.5)
+    assert p["p95"] == pytest.approx(94.05)
+    assert p["p99"] == pytest.approx(98.01)
+    assert latency_percentiles([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+
+def test_interarrival_predictor():
+    pr = InterArrivalPredictor(alpha=0.5)
+    assert pr.predict(1) is None                 # nothing observed yet
+    for t in (0.0, 10.0, 20.0, 30.0):
+        pr.observe(1, t)
+    assert pr.predict(1) == pytest.approx(10.0)
+    # a session seen once falls back to the global prior
+    pr.observe(2, 5.0)
+    assert pr.predict(2) == pytest.approx(10.0, rel=0.01)
+
+
+# ----------------------------------------------------------- synthetic engine
+def test_synthetic_backend_park_resume_bit_identical():
+    """The synthetic backend honours the same contract as the JAX one:
+    park/resume through a REAL ServingEngine + LocStore reproduces the
+    uninterrupted token stream, and the store accounts the modeled bytes."""
+    kv = 4 * MiB
+    router, store = build_trace_stack(n_engines=1, max_batch=2, kv_bytes=kv,
+                                      bb_slots_per_node=4)
+    (eng,) = router.engines.values()
+    control = ServingEngine(None, None, node=0,
+                            backend=SyntheticBackend(kv_bytes=kv))
+    prompt = [5, 6, 7]
+    sid = eng.submit(prompt)
+    cid = control.submit(prompt)
+    for _ in range(3):
+        eng.step()
+        control.step()
+    eng.park(sid)
+    assert store.tier_used(0, "bb") >= kv        # parked slice in the bb
+    eng.resume(sid)
+    for _ in range(3):
+        eng.step()
+        control.step()
+    assert eng.sessions[sid].tokens == control.sessions[cid].tokens
+    assert eng.slot_bytes() == kv
+
+
+def test_route_decision_kinds_synthetic():
+    router, store = build_trace_stack(n_engines=2, max_batch=2)
+    (e0, e1) = (router.engines[0], router.engines[1])
+    d = router.route(None)
+    assert d.kind == "new" and d.engine in (e0, e1)
+    sid = e0.submit([1, 2, 3])
+    d = router.follow_up(sid, [1, 2, 3])
+    assert d.kind == "hit_live" and d.sid == sid and not d.resumed
+    e0.park(sid)
+    d = router.follow_up(sid, [1, 2, 3])
+    assert d.kind == "hit_parked" and d.resumed and not d.prefilled
+
+
+# --------------------------------------------------------------------- driver
+def _run(n_sessions=250, *, warm=False, tiered=True, failures=(), seed=21,
+         bb=8, engines=2, batch=4, followups=2.0, rate=60.0,
+         durability="none"):
+    trace = generate_trace(TraceConfig(
+        n_sessions=n_sessions, followups_per_session=followups,
+        req_rate=rate, arrival="bursty", seed=seed))
+    router, store = build_trace_stack(n_engines=engines, max_batch=batch,
+                                      kv_bytes=8 * MiB, tiered=tiered,
+                                      bb_slots_per_node=bb,
+                                      durability=durability)
+    drv = TraceDriver(router, trace, warm=warm, failures=failures)
+    return drv.run(), router, store
+
+
+def test_driver_lifecycle_under_pressure():
+    rep, router, store = _run()
+    s = rep.summary()
+    assert s["requests"] == rep.requests == 750
+    assert s["sessions"] == 250
+    # memory pressure forced parking and resuming, never an engine-full error
+    assert s["engine_full_errors"] == 0
+    assert s["resumes"] > 0
+    assert sum(e.parks for e in router.engines.values()) > 0
+    assert s["p99_ttft_ms"] >= s["p50_ttft_ms"] > 0
+    # every arrival is accounted exactly once
+    assert (s["new_sessions"] + s["lost_reprefills"] + s["followups"]
+            == rep.requests)
+
+
+def test_driver_deterministic_rerun():
+    rep1, _, _ = _run(warm=True)
+    rep2, _, _ = _run(warm=True)
+    assert rep1.summary() == rep2.summary()
+
+
+def test_predictive_warming_hides_resume_latency():
+    cold, _, _ = _run(warm=False, seed=33)
+    warmed, _, _ = _run(warm=True, seed=33)
+    sw = warmed.summary()
+    assert sw["warms"] > 0 and sw["warm_hits"] > 0
+    assert sw["resume_hidden_s"] > 0
+    # partial warm hits pay one extra top-tier read; allow that epsilon
+    assert (sw["p99_resume_ms"]
+            <= cold.summary()["p99_resume_ms"] * 1.05)
+
+
+def test_flat_pinning_pays_on_tail_ttft():
+    tiered, _, _ = _run(seed=44, warm=True)
+    flat, _, _ = _run(seed=44, tiered=False)
+    st, sf = tiered.summary(), flat.summary()
+    # flat pinning force-finishes LRU sessions and re-prefills whole
+    # histories; the tiered park/resume path beats it on tail TTFT
+    assert sf["force_finished"] > 0 and sf["lost_reprefills"] > 0
+    assert st["p99_ttft_ms"] < sf["p99_ttft_ms"]
+    assert st["engine_full_errors"] == 0
+
+
+def test_driver_failover_mid_trace():
+    trace = generate_trace(TraceConfig(n_sessions=200,
+                                       followups_per_session=2.0,
+                                       req_rate=50.0, seed=8))
+    t_mid = trace[len(trace) // 2].t
+    rep, router, _ = _run(n_sessions=200, failures=((t_mid, 0),), seed=8,
+                          rate=50.0, durability="flush_before_ack")
+    s = rep.summary()
+    assert 0 not in router.engines                 # the node is gone
+    assert s["failover_resumed"] > 0               # durable parks re-homed
+    assert s["failover_resumed"] + s["failover_lost"] > 0
+    assert s["engine_full_errors"] == 0
+    assert rep.requests == 600                     # every request was served
+
+
+def test_tier_used_matches_tier_report():
+    """The O(1) pressure probe agrees with the full-scan report."""
+    _, router, store = _run(n_sessions=120, seed=13)
+    for node in router.engines:
+        rep = store.tier_report(node=node)
+        for tier in ("hbm", "bb"):
+            assert store.tier_used(node, tier) == rep[tier]["resident_bytes"]
+
+
+def test_bytes_promoted_accounting():
+    _, router, store = _run(n_sessions=120, warm=True, seed=13)
+    mv = store.movement_report()
+    assert mv["bytes_promoted"] > 0
+    assert mv["promotions"] > 0
+    store.reset_accounting()
+    assert store.movement_report()["bytes_promoted"] == 0.0
