@@ -12,8 +12,9 @@ Usage (the CI --quick job runs it right after ``run.py --quick``)::
   with like; commit a fresh ``BENCH_<n+1>.json`` per PR to ratchet.
 * **Watched metrics**: ``key=value`` tokens in a row's ``derived`` string.
   Keys mentioning ``remote``, ``io_wait``, ``reruns`` (failure-induced task
-  re-executions), ``dirty_lost``, ``phantom``, ``p99_ttft``, or
-  ``p99_resume`` (the serving-trace tail-latency SLOs, PR 7) are
+  re-executions), ``dirty_lost``, ``phantom``, ``p99_ttft``,
+  ``p99_resume`` (the serving-trace tail-latency SLOs, PR 7), ``recovery``
+  or ``goodput_dip`` (the elastic-membership recovery SLOs, PR 8) are
   **higher-is-worse**:
   the gate fails when current > threshold x baseline. Keys mentioning
   ``saved`` (``reruns_saved``, ``prefills_saved`` — the durability/failover
@@ -52,7 +53,7 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 WATCHED = ("remote", "io_wait", "reruns", "dirty_lost", "phantom",
-           "p99_ttft", "p99_resume")
+           "p99_ttft", "p99_resume", "recovery", "goodput_dip")
 # wins that must not shrink: checked in the opposite direction. Matched
 # FIRST — "reruns_saved" is a saving, not a rerun count.
 WATCHED_DOWN = ("saved",)

@@ -14,6 +14,8 @@ results/benchmarks.json).
   E9 bench_failures  — durability policies under node failures + serving failover
   E10 bench_serving_trace — 10^5-session trace replay: tail-latency SLOs
       (p50/p95/p99 TTFT + resume), flat pinning vs tiers vs predictive warm
+  E11 bench_membership — elastic membership: fail-then-join recovery time,
+      goodput dip, autoscale-under-load, workflow re-replication cycle
 
 ``--quick`` runs every module at smoke scale (small shapes, few reps) — the
 CI benchmark job uses it to keep the perf trajectory alive on every push
@@ -48,12 +50,14 @@ def main() -> int:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_ablation, bench_failures, bench_locstore,
-                            bench_prefetch, bench_roofline, bench_scheduler,
-                            bench_serving, bench_serving_trace, bench_tiers,
+                            bench_membership, bench_prefetch, bench_roofline,
+                            bench_scheduler, bench_serving,
+                            bench_serving_trace, bench_tiers,
                             bench_writeback)
     modules = [bench_scheduler, bench_prefetch, bench_ablation,
                bench_locstore, bench_serving, bench_roofline, bench_tiers,
-               bench_writeback, bench_failures, bench_serving_trace]
+               bench_writeback, bench_failures, bench_serving_trace,
+               bench_membership]
 
     rows: list[dict] = []
 

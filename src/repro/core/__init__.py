@@ -11,7 +11,8 @@ from repro.core.config import ServingConfig, SimConfig
 from repro.core.dag import DataSpec, TaskGraph, TaskSpec
 from repro.core.executor import WorkflowExecutor
 from repro.core.hints import Complexity, TaskHints, size_hint, task
-from repro.core.locstore import (FLAT_HIERARCHY, LocationService, LocStore,
+from repro.core.locstore import (DropReport, FLAT_HIERARCHY, JoinReport,
+                                 LocationService, LocStore,
                                  Placement, REMOTE_TIER, SimObject,
                                  StorageHierarchy, TierHop, TierSpec, Transfer,
                                  WriteBackEntry, WriteBackQueue,
@@ -29,6 +30,7 @@ __all__ = [
     "LocationService", "LocStore", "Placement", "REMOTE_TIER", "SimObject",
     "Transfer", "TierHop", "TierSpec", "StorageHierarchy", "FLAT_HIERARCHY",
     "tiered_hierarchy", "WriteBackEntry", "WriteBackQueue",
+    "DropReport", "JoinReport",
     "CompiledWorkflow", "HardwareModel", "HPC_CLUSTER", "TPU_V5E",
     "compile_workflow",
     "Assignment", "FCFSScheduler", "LocalityScheduler", "PrefetchRequest",

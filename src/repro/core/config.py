@@ -44,6 +44,8 @@ class SimConfig:
     hw: HardwareModel = TPU_V5E
     speeds: Mapping[int, float] | None = None
     failures: tuple[tuple[float, int], ...] = ()
+    joins: tuple[tuple[float, int], ...] = ()
+    join_rereplicate_bytes: float = float("inf")
     external_loc: str = "remote"            # "remote" | "scattered"
     proactive: bool | None = None
     hierarchy: StorageHierarchy | None = None
@@ -62,6 +64,9 @@ class SimConfig:
         failures: Sequence[tuple[float, int]] | None = kw.get("failures")
         if failures is not None:
             kw["failures"] = tuple((float(t), int(n)) for t, n in failures)
+        joins: Sequence[tuple[float, int]] | None = kw.get("joins")
+        if joins is not None:
+            kw["joins"] = tuple((float(t), int(n)) for t, n in joins)
         return cls(**kw)
 
 

@@ -80,6 +80,19 @@ logical remote residency those flushes pre-recorded, and clears the node's
 pin refcounts. Objects whose last copy died are deleted so ``exists()``
 turns False and the caller can re-run the producer.
 
+**Elastic membership** (``join_node``/``revive_node``): the arrival half of
+the lifecycle, modeled on the saxml join protocol (the node announces
+itself; the admin side updates membership). ``join_node`` clears the node
+from the failed set (or grows ``n_nodes`` for a brand-new id), reopens
+default placement to it, and publishes a ``("join_node", node, None)``
+event so event-driven subscribers (indexed schedulers, the simulator's
+candidate index, cached cluster views) absorb the newcomer without a
+rescan. ``rereplication_candidates``/``rereplicate_to`` then close the
+at-risk window the write side of ``risk_aware`` worries about: objects
+whose ONLY node-local copy sits on one surviving node — dirty (no durable
+PFS version: losing that node loses the data) first — are copied toward
+the newcomer.
+
 Values can be anything sized: JAX arrays (``.nbytes``), numpy arrays, bytes, or
 :class:`SimObject` stand-ins for the simulator. ``get(name, at=node)`` returns
 the value AND a :class:`Transfer` record of the bytes that had to move — with
@@ -89,6 +102,7 @@ this repo is built on.
 
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 import hashlib
@@ -100,7 +114,7 @@ __all__ = ["Placement", "SimObject", "Transfer", "TierHop", "TierSpec",
            "StorageHierarchy", "FLAT_HIERARCHY", "tiered_hierarchy",
            "LocationService", "LocStore", "REMOTE_TIER",
            "WriteBackEntry", "WriteBackQueue", "WRITE_POLICIES",
-           "DURABILITY_POLICIES", "DropReport"]
+           "DURABILITY_POLICIES", "DropReport", "JoinReport"]
 
 WRITE_POLICIES = ("through", "back", "around")
 DURABILITY_POLICIES = ("none", "flush_before_ack", "fsync_on_barrier")
@@ -457,6 +471,20 @@ class DropReport:
     released_pins: int
 
 
+@dataclasses.dataclass(frozen=True)
+class JoinReport:
+    """What :meth:`LocStore.join_node` did when a node (re)joined.
+
+    ``rejoined`` means the id was in the failed set (a revival — its tiers
+    start empty, its pin refcounts were already released by ``drop_node``);
+    ``grew`` means the id was beyond ``n_nodes`` and the cluster was
+    extended to absorb it (scale-out)."""
+
+    node: int
+    rejoined: bool
+    grew: bool
+
+
 class LocationService:
     """Distributed location-metadata service (consistent-hash sharded).
 
@@ -635,26 +663,35 @@ class LocStore:
         self.phantom_durable = 0       # drains that would have laundered a
         # dead node's un-flushed bytes into a "durable" PFS copy (always 0
         # when failures go through drop_node — this is defense in depth)
+        # membership / re-replication accounting
+        self.rereplications = 0
+        self.bytes_rereplicated = 0.0
         self._failed_nodes: set[int] = set()
+        # sorted alive-node ids — default placement maps over this list so
+        # hash/rr mass redistributes uniformly when nodes fail (no linear
+        # probing, which would dump a dead run's mass on its first survivor)
+        self._alive: list[int] = list(range(n_nodes))
 
     # ------------------------------------------------------------ placement
     def _default_placement(self, name: str) -> Placement:
-        if self.default_policy == "hash":       # Hercules/Memcached behaviour
-            node = _stable_hash(name) % self.n_nodes
-        elif self.default_policy == "rr":
-            with self._lock:
-                node = self._rr % self.n_nodes
-                self._rr += 1
-        else:
-            raise ValueError(f"unknown default policy {self.default_policy!r}")
+        """Map over the *alive* list, not the full id range: indexing
+        ``alive[h % len(alive)]`` keeps placement near-uniform across
+        survivors no matter which nodes are down. (The old linear probe
+        ``(node + 1) % n_nodes`` handed a dead run's entire hash/rr mass to
+        its first surviving successor.) With nothing failed the alive list
+        is ``range(n_nodes)`` and the mapping is identical to the original."""
         with self._lock:
-            if self._failed_nodes:              # hash/rr must skip dead nodes
-                for _ in range(self.n_nodes):
-                    if node not in self._failed_nodes:
-                        break
-                    node = (node + 1) % self.n_nodes
-                else:
-                    raise RuntimeError("every node has failed")
+            alive = self._alive
+            if not alive:
+                raise RuntimeError("every node has failed")
+            if self.default_policy == "hash":   # Hercules/Memcached behaviour
+                node = alive[_stable_hash(name) % len(alive)]
+            elif self.default_policy == "rr":
+                node = alive[self._rr % len(alive)]
+                self._rr += 1
+            else:
+                raise ValueError(
+                    f"unknown default policy {self.default_policy!r}")
         return Placement(nodes=(node,), tier=self.hierarchy.top)
 
     def _norm_loc(self, loc: Any) -> Placement:
@@ -1060,6 +1097,9 @@ class LocStore:
         the caller can re-run producers."""
         with self._lock:
             self._failed_nodes.add(node)
+            i = bisect.bisect_left(self._alive, node)
+            if i < len(self._alive) and self._alive[i] == node:
+                del self._alive[i]
             lost: list[str] = []
             survived: list[str] = []
             dirty_lost: list[str] = []
@@ -1108,6 +1148,112 @@ class LocStore:
                           cancelled_flushes=len(cancelled),
                           phantom_remote_revoked=phantom,
                           released_pins=released)
+
+    def join_node(self, node: int) -> JoinReport:
+        """Admit ``node`` into the cluster (saxml-style join: the node
+        announces itself, the admin side updates membership).
+
+        Handles both halves of elasticity: a *rejoin* clears the failed
+        mark left by :meth:`drop_node` (the node returns with empty tiers —
+        its data died with it), and a *growth* join extends ``n_nodes`` for
+        a brand-new id. Either way the node re-enters default placement and
+        a ``("join_node", node, None)`` event is published so event-driven
+        subscribers (indexed scheduler mirrors, preplace eligibility, the
+        simulator's candidate index and cached cluster views) absorb the
+        newcomer without a rescan."""
+        if node < 0:
+            raise ValueError(f"node id must be >= 0, got {node}")
+        with self._lock:
+            rejoined = node in self._failed_nodes
+            grew = node >= self.n_nodes
+            self._failed_nodes.discard(node)
+            if grew:
+                # a gapped growth join (node 5 into a 4-node cluster) must
+                # NOT silently admit the skipped ids: mark them failed so
+                # alive + failed always partitions range(n_nodes) and a
+                # later join_node/revive_node can admit them explicitly
+                self._failed_nodes.update(range(self.n_nodes, node))
+                self.n_nodes = node + 1
+            i = bisect.bisect_left(self._alive, node)
+            if i == len(self._alive) or self._alive[i] != node:
+                self._alive.insert(i, node)
+            # a rejoining node starts cold: defensively purge any residual
+            # per-node state (drop_node already cleared these — this guards
+            # against a join for a node that never went through drop_node)
+            for key in [k for k in self._usage if k[0] == node]:
+                del self._usage[key]
+            for key in [k for k in self._last_access if k[0] == node]:
+                del self._last_access[key]
+            for key in [k for k in self._pins if k[1] == node]:
+                del self._pins[key]
+        self.loc.notify("join_node", node, None)
+        return JoinReport(node=node, rejoined=rejoined, grew=grew)
+
+    def revive_node(self, node: int) -> JoinReport:
+        """Re-admit a node that previously failed (strict :meth:`join_node`:
+        raises if ``node`` is not currently in the failed set)."""
+        with self._lock:
+            if node not in self._failed_nodes:
+                raise ValueError(f"node {node} is not failed — use "
+                                 f"join_node() for growth joins")
+        return self.join_node(node)
+
+    def rereplication_candidates(self, node: int, *,
+                                 max_bytes: float = float("inf")
+                                 ) -> list[tuple[str, int, str, float]]:
+        """Objects worth copying toward a newcomer, riskiest first.
+
+        A candidate has exactly ONE node-local replica (a real PFS copy
+        does not count — re-replication is about node-local locality and
+        loss exposure), lives on a surviving node other than ``node``, and
+        is not write-around (those are never replicated). Ordering is the
+        write side of ``risk_aware``: *dirty* sole copies first (no durable
+        PFS version — losing that node loses the data), then clean sole
+        copies; largest-first within each class, name as the deterministic
+        tiebreak. ``max_bytes`` caps the greedy budget (too-big entries are
+        skipped, smaller ones keep filling).
+
+        Returns ``(name, src_node, src_tier, nbytes)`` tuples."""
+        out: list[tuple[int, float, str, int, str]] = []
+        with self._lock:
+            for name, res in self._residency.items():
+                locals_ = [(n, t) for n, t in res.items() if n != REMOTE_TIER]
+                if len(locals_) != 1:
+                    continue
+                src, src_tier = locals_[0]
+                if src == node or src in self._failed_nodes:
+                    continue
+                if self._mode.get(name, self.write_policy) == "around":
+                    continue
+                nbytes = self._sizes.get(name, 0.0)
+                risk = 0 if name in self._dirty else 1
+                out.append((risk, -nbytes, name, src, src_tier))
+        out.sort()
+        picked: list[tuple[str, int, str, float]] = []
+        budget = max_bytes
+        for risk, neg, name, src, src_tier in out:
+            nbytes = -neg
+            if nbytes > budget:
+                continue
+            budget -= nbytes
+            picked.append((name, src, src_tier, nbytes))
+        return picked
+
+    def rereplicate_to(self, node: int, *, max_bytes: float = float("inf"),
+                       tier: str | None = None) -> tuple[str, ...]:
+        """Copy sole-copy objects (dirty first) onto ``node`` — close the
+        at-risk window a newcomer opens the capacity to close. ``tier`` is
+        the landing tier on the newcomer (default: the hierarchy's bottom —
+        bulk re-replication must not shoulder warm data out of fast tiers)."""
+        want = tier if tier is not None else self.hierarchy.bottom
+        done: list[str] = []
+        for name, _src, _src_tier, nbytes in self.rereplication_candidates(
+                node, max_bytes=max_bytes):
+            self.replicate(name, [node], tier=want)
+            self.rereplications += 1
+            self.bytes_rereplicated += nbytes
+            done.append(name)
+        return tuple(done)
 
     def _sync_placement(self, name: str) -> None:
         """Re-record the LocationService entry from the residency map."""
@@ -1433,6 +1579,8 @@ class LocStore:
             "fsyncs": float(self.fsyncs),
             "fsync_bytes": self.fsync_bytes,
             "phantom_durable": float(self.phantom_durable),
+            "rereplications": float(self.rereplications),
+            "bytes_rereplicated": self.bytes_rereplicated,
         }
 
     def tier_used(self, node: int, tier: str | None = None) -> float:
@@ -1491,3 +1639,5 @@ class LocStore:
             self.fsyncs = 0
             self.fsync_bytes = 0.0
             self.phantom_durable = 0
+            self.rereplications = 0
+            self.bytes_rereplicated = 0.0

@@ -632,6 +632,13 @@ class ProactiveScheduler(LocalityScheduler):
             for tid in [t for t, n in self.preassignment.items() if n == key]:
                 del self.preassignment[tid]
                 self._eligible.pop(tid, None)
+        elif event == "join_node":
+            # deliberate no-op: a joining node holds no data, so no
+            # placement mirror / prefetch marker / preassignment refers to
+            # it (drop_node purged them at failure time). Its eligibility
+            # as a preplace target flows from the cluster views the caller
+            # passes per tick — nothing here to index.
+            pass
         super()._on_store_event(event, key, placement)
         if self._indexed and event in ("record", "drop"):
             self._refresh_eligible(key)

@@ -28,8 +28,8 @@ import itertools
 from typing import Callable, Mapping, Sequence
 
 from repro.core.config import SimConfig
-from repro.core.locstore import (DropReport, LocStore, Placement, REMOTE_TIER,
-                                 SimObject)
+from repro.core.locstore import (DropReport, JoinReport, LocStore, Placement,
+                                 REMOTE_TIER, SimObject)
 from repro.core.scheduler import (Assignment, ClusterView, ProactiveScheduler,
                                   SchedulerBase)
 from repro.core.wfcompiler import CompiledWorkflow, HardwareModel
@@ -64,7 +64,12 @@ class SimResult:
     dirty_lost: int = 0           # lost objects a tighter window would've kept
     phantom_durable: int = 0      # laundered drains (must stay 0)
     prefetch_aborts: int = 0      # in-flight transfers whose src node died
+    # elastic membership accounting
+    joins: int = 0                # nodes (re)admitted mid-run
+    rereplications: int = 0       # sole-copy objects staged toward newcomers
+    bytes_rereplicated: float = 0.0
     drop_reports: list[DropReport] = dataclasses.field(default_factory=list)
+    join_reports: list[JoinReport] = dataclasses.field(default_factory=list)
 
     @property
     def locality_hit_rate(self) -> float:
@@ -94,6 +99,9 @@ class SimResult:
             "dirty_lost": float(self.dirty_lost),
             "phantom_durable": float(self.phantom_durable),
             "prefetch_aborts": float(self.prefetch_aborts),
+            "joins": float(self.joins),
+            "rereplications": float(self.rereplications),
+            "bytes_rereplicated": self.bytes_rereplicated,
         }
 
 
@@ -136,6 +144,39 @@ class SimCluster(ClusterView):
         self.free.discard(node)
         self._free_cache = None
         self._alive_cache = None
+
+    def join(self, node: int) -> None:
+        """Absorb a (re)joining node into the cached views incrementally —
+        no rescan: the sorted free/alive caches get a bisect-insort, and on
+        growth every cached link row is extended in place (bandwidths are
+        static per HardwareModel, so appending the new destinations keeps
+        each row exact)."""
+        grew = node >= self.n_nodes
+        if grew:
+            old_n = self.n_nodes
+            self.n_nodes = node + 1
+            # skipped ids in a gapped growth join never joined: mark them
+            # failed so an eventual cache rebuild agrees with the
+            # incremental inserts below (alive + failed partitions
+            # range(n_nodes), exactly as in LocStore.join_node)
+            self.failed.update(range(old_n, node))
+            for src, (row, _uniform) in list(self._link_rows.items()):
+                row.extend(self.hw.link_gbps(src, dst)
+                           for dst in range(old_n, self.n_nodes))
+                vals = set(row[:src] + row[src + 1:]
+                           if 0 <= src < self.n_nodes else row)
+                uniform = vals.pop() if len(vals) == 1 else None
+                self._link_rows[src] = (row, uniform)
+        was_failed = node in self.failed
+        self.failed.discard(node)
+        if not (was_failed or grew):
+            return          # already a live member (possibly busy): no-op
+        self.free.add(node)
+        for cache in (self._free_cache, self._alive_cache):
+            if cache is not None:
+                i = bisect.bisect_left(cache, node)
+                if i == len(cache) or cache[i] != node:
+                    cache.insert(i, node)
 
     def free_workers(self) -> Sequence[int]:
         if self._free_cache is None:
@@ -188,6 +229,7 @@ _TASK_FINISH = 0
 _XFER_DONE = 1
 _FAIL = 2
 _WB_FLUSH = 3
+_JOIN = 4
 
 
 class WorkflowSimulator:
@@ -224,6 +266,8 @@ class WorkflowSimulator:
         self.cluster = SimCluster(config.n_nodes, config.hw, self.store,
                                   config.speeds)
         self.failures = sorted(config.failures)
+        self.joins = sorted(config.joins)
+        self.join_rereplicate_bytes = config.join_rereplicate_bytes
         self.proactive = (isinstance(scheduler, ProactiveScheduler)
                           if config.proactive is None else config.proactive)
         # honor the compiler's per-dataset write-mode pins (pass 5): outputs
@@ -257,6 +301,10 @@ class WorkflowSimulator:
         events: list[tuple[float, int, int, object]] = []
         for t, node in self.failures:
             heapq.heappush(events, (t, next(seq), _FAIL, node))
+        # joins pushed after failures: a same-instant fail-then-join cycle
+        # processes the failure first (seq breaks the time tie in push order)
+        for t, node in self.joins:
+            heapq.heappush(events, (t, next(seq), _JOIN, node))
 
         unfinished_preds = {tid: sum(1 for _ in wf.graph.predecessors(tid))
                             for tid in wf.graph.tasks}
@@ -276,7 +324,11 @@ class WorkflowSimulator:
         reruns = 0
         dirty_lost = 0
         prefetch_aborts = 0
+        joins_done = 0
+        rereplications = 0
+        bytes_rereplicated = 0.0
         drop_reports: list[DropReport] = []
+        join_reports: list[JoinReport] = []
         records: dict[str, dict] = {}
         done = 0
         total = len(wf.graph.tasks)
@@ -497,6 +549,48 @@ class WorkflowSimulator:
                 # ready in bulk — failures are rare, recompute membership
                 cand_rebuild()
 
+        def join_node(node: int, t0: float) -> None:
+            nonlocal joins_done, rereplications, bytes_rereplicated
+            # charge pre-join traffic before touching the newcomer's lanes
+            drain_eviction_traffic(t0)
+            grew = node >= len(nic_free)
+            was_failed = node in self.cluster.failed
+            while len(nic_free) < node + 1:
+                nic_free.append(t0)
+                nic_bg_free.append(t0)
+            if was_failed:
+                # a rejoining node's NIC starts idle at the join instant
+                # (an already-alive node keeps its queued traffic)
+                nic_free[node] = t0
+                nic_bg_free[node] = t0
+            # storage layer first: clears the failed mark, reopens default
+            # placement, and fires ("join_node", node, None) so the indexed
+            # scheduler and preplace eligibility absorb the newcomer
+            report = self.store.join_node(node)
+            join_reports.append(report)
+            self.cluster.join(node)
+            if report.grew:
+                self.n_nodes = self.store.n_nodes
+            joins_done += 1
+            # re-replicate toward the newcomer: sole-copy objects, dirty
+            # first (the write side of risk_aware) — staged as background
+            # transfers so the copies pay real network/media time and only
+            # materialize when the lane delivers them (_XFER_DONE with no
+            # consuming task: replicate without a pin)
+            bulk = self.store.hierarchy.bottom
+            for name, src, src_tier, nbytes in \
+                    self.store.rereplication_candidates(
+                        node, max_bytes=self.join_rereplicate_bytes):
+                dur = (self.hw.move_seconds(nbytes, src, node)
+                       + self.store.hierarchy.media_seconds(nbytes, src_tier)
+                       + self.store.hierarchy.media_seconds(nbytes, bulk))
+                start = max(nic_bg_free[node], t0)
+                nic_bg_free[node] = start + dur
+                rereplications += 1
+                bytes_rereplicated += nbytes
+                heapq.heappush(events, (start + dur, next(seq), _XFER_DONE,
+                                        (name, src, node, bulk, None)))
+
         schedule_pass(0.0)
         while events:
             now, _, kind, payload = heapq.heappop(events)
@@ -553,6 +647,8 @@ class WorkflowSimulator:
                 self.store.drain_writebacks(max_entries=1)
             elif kind == _FAIL:
                 fail_node(payload, now)  # type: ignore[arg-type]
+            elif kind == _JOIN:
+                join_node(payload, now)  # type: ignore[arg-type]
             schedule_pass(now)
             if done == total and not any(st == "running" for st in state.values()):
                 # drain queued failures/transfers without extending makespan
@@ -590,7 +686,11 @@ class WorkflowSimulator:
             dirty_lost=dirty_lost,
             phantom_durable=int(rep["phantom_durable"]),
             prefetch_aborts=prefetch_aborts,
+            joins=joins_done,
+            rereplications=rereplications,
+            bytes_rereplicated=bytes_rereplicated,
             drop_reports=drop_reports,
+            join_reports=join_reports,
         )
 
     def _invalidate(self, tid: str, state: dict, unfinished_preds: dict,

@@ -6,7 +6,8 @@ from :mod:`repro.serve.traffic`, plus the shared :class:`ServingConfig`.
 """
 
 from repro.core.config import ServingConfig
-from repro.serve.engine import (FailoverReport, JaxComputeBackend, KVSlice,
+from repro.serve.engine import (EngineJoinReport, FailoverReport,
+                                JaxComputeBackend, KVSlice,
                                 RouteDecision, Router, ServingEngine, Session)
 from repro.serve.traffic import (CostModel, InterArrivalPredictor, Request,
                                  SyntheticBackend, TraceConfig, TraceDriver,
@@ -16,7 +17,8 @@ from repro.serve.traffic import (CostModel, InterArrivalPredictor, Request,
 
 __all__ = [
     "ServingConfig",
-    "FailoverReport", "JaxComputeBackend", "KVSlice", "RouteDecision",
+    "EngineJoinReport", "FailoverReport", "JaxComputeBackend", "KVSlice",
+    "RouteDecision",
     "Router", "ServingEngine", "Session",
     "CostModel", "InterArrivalPredictor", "Request", "SyntheticBackend",
     "TraceConfig", "TraceDriver", "TraceReport", "build_trace_stack",

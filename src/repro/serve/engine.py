@@ -55,7 +55,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.config import ServingConfig
-from repro.core.locstore import DropReport, LocStore
+from repro.core.locstore import DropReport, JoinReport, LocStore
 from repro.core.prefetch import PrefetchEngine
 from repro.models import model as M
 
@@ -180,12 +180,33 @@ class FailoverReport:
     prefill NOT paid. ``lost`` sessions need a fresh prefill: they
     were live in a slot (the authoritative KV died with the engine) or their
     parked slice had no surviving replica (it was still inside the durability
-    window). ``drop`` is the storage layer's atomic account of the failure."""
+    window). ``deferred`` sessions kept a durable, compatible-in-principle
+    slice that no *currently registered* engine can load (including the
+    all-engines-down window) — the slice stays parked-unhomed and the next
+    compatible :meth:`Router.join_engine` adopts it. ``drop`` is the storage
+    layer's atomic account of the failure."""
 
     node: int
     resumed: tuple[int, ...]
     lost: tuple[int, ...]
     drop: DropReport
+    deferred: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineJoinReport:
+    """What :meth:`Router.join_engine` did when an engine node (re)joined.
+
+    ``adopted`` sessions were parked-unhomed by an earlier failover (their
+    durable slice had no compatible home) and re-homed onto the newcomer —
+    each one a prefill NOT paid. ``rebalanced`` sessions were moved off
+    saturated survivors to level parked load. ``join`` is the storage
+    layer's membership report."""
+
+    node: int
+    adopted: tuple[int, ...]
+    rebalanced: tuple[int, ...]
+    join: JoinReport
 
 
 @dataclasses.dataclass(frozen=True)
@@ -563,6 +584,13 @@ class Router:
         self.warmups = 0
         self.failover_resumes = 0     # sessions re-hydrated across engines
         self.failover_lost = 0        # sessions needing a fresh prefill
+        self.failover_deferred = 0    # durable slices parked-unhomed, waiting
+        # for a compatible join_engine
+        self.engine_joins = 0
+        self.rebalanced_sessions = 0
+        # sid -> (prompt_len, tokens) of sessions whose durable slice
+        # survived a failover but had no compatible home at the time
+        self._unhomed: dict[int, tuple[int, list[int]]] = {}
 
     # ------------------------------------------------------------ cost model
     def _resume_cost(self, eng: ServingEngine, name: str) -> float:
@@ -672,6 +700,12 @@ class Router:
             s = e.sessions.get(sid)
             if s is not None and not s.done:
                 e.finish(sid)
+        if sid in self._unhomed:
+            # a deferred failover session re-prefilled before any compatible
+            # engine joined: its parked-unhomed slice is superseded
+            del self._unhomed[sid]
+            if self.store.exists(_cache_name(sid)):
+                self.store.delete(_cache_name(sid))
         self.migrations += 1
         if not eng.can_admit():     # engine_for made room already unless flat
             raise RuntimeError("engine full")
@@ -701,38 +735,148 @@ class Router:
         drop = self.store.drop_node(node)
         resumed: list[int] = []
         lost: list[int] = []
+        deferred: list[int] = []
         for sid, sess in list(eng.sessions.items()):
             if sess.done:
                 continue
             sess.done = True              # the home engine is gone either way
             name = _cache_name(sid)
-            target: ServingEngine | None = None
+            value: KVSlice | None = None
             if sess.slot is None and self.store.exists(name):
-                value, _ = self.store.get(name)         # metadata read
-                if isinstance(value, KVSlice) and value.state is not None:
-                    # most-free surviving engine with a matching slot shape —
-                    # a full engine is still a valid home: the session can
-                    # stay parked there, so capacity never forfeits a
-                    # surviving durable replica
-                    target = next(
-                        (cand for cand in sorted(self.engines.values(),
-                                                 key=lambda e:
-                                                 -len(e._free_slots))
-                         if cand.compatible_state(value.state)), None)
+                v, _ = self.store.get(name)             # metadata read
+                if isinstance(v, KVSlice) and v.state is not None:
+                    value = v
+            target: ServingEngine | None = None
+            if value is not None:
+                # most-free surviving engine with a matching slot shape —
+                # a full engine is still a valid home: the session can
+                # stay parked there, so capacity never forfeits a
+                # surviving durable replica
+                target = next(
+                    (cand for cand in sorted(self.engines.values(),
+                                             key=lambda e:
+                                             -len(e._free_slots))
+                     if cand.compatible_state(value.state)), None)
             if target is not None and target.adopt(
                     sid, prompt_len=sess.prompt_len, tokens=sess.tokens):
                 resumed.append(sid)
                 self.failover_resumes += 1
+            elif value is not None:
+                # the slice is durable and loadable in principle — no
+                # *currently registered* engine matches (possibly none is
+                # left at all). Deleting it would forfeit a prefill's worth
+                # of work the durability policy just paid to keep: park it
+                # unhomed and let the next compatible join_engine adopt it.
+                deferred.append(sid)
+                self.failover_deferred += 1
+                self._unhomed[sid] = (sess.prompt_len, list(sess.tokens))
             else:
                 lost.append(sid)
                 self.failover_lost += 1
                 if self.store.exists(name):
                     # only unusable slices land here: a live-session
-                    # placeholder (state=None) or a slice no surviving
-                    # engine's slot shape can ever load
+                    # placeholder (state=None) whose authoritative KV died
+                    # in the engine's slot memory
                     self.store.delete(name)
         return FailoverReport(node=node, resumed=tuple(resumed),
-                              lost=tuple(lost), drop=drop)
+                              lost=tuple(lost), drop=drop,
+                              deferred=tuple(deferred))
+
+    # ------------------------------------------------------------ membership
+    def join_engine(self, node: int, engine: ServingEngine, *,
+                    rebalance: bool = True) -> EngineJoinReport:
+        """Admit a new engine node, cross-layer (the arrival half of
+        :meth:`fail_engine`).
+
+        The storage layer joins first (``store.join_node``: clear the failed
+        mark, reopen default placement, publish the ``join_node`` event),
+        then the engine registers for routing, adopts every parked-unhomed
+        session whose deferred slice its slots can load (the other half of
+        the ``failover_deferred`` contract), and — unless ``rebalance=False``
+        — pulls parked sessions off saturated survivors to level load
+        (:meth:`rebalance_parked`). Cold-start pricing (params load) is the
+        trace driver's job: the router only decides placement."""
+        if node in self.engines:
+            raise ValueError(f"node {node} already has an engine")
+        if engine.node != node:
+            raise ValueError(f"engine is bound to node {engine.node}, "
+                             f"asked to join as {node}")
+        if engine.store is not self.store:
+            raise ValueError("joining engine must share the router's store")
+        join = self.store.join_node(node)
+        self.engines[node] = engine
+        adopted: list[int] = []
+        for sid, (prompt_len, tokens) in sorted(self._unhomed.items()):
+            name = _cache_name(sid)
+            if not self.store.exists(name):
+                del self._unhomed[sid]       # slice vanished: nothing to adopt
+                continue
+            value, _ = self.store.get(name)             # metadata read
+            if not isinstance(value, KVSlice) or value.state is None \
+                    or not engine.compatible_state(value.state):
+                continue                     # wait for a matching engine
+            if engine.adopt(sid, prompt_len=prompt_len, tokens=tokens):
+                del self._unhomed[sid]
+                adopted.append(sid)
+                self.failover_resumes += 1
+        rebalanced = (tuple(self.rebalance_parked(engine))
+                      if rebalance else ())
+        self.engine_joins += 1
+        return EngineJoinReport(node=node, adopted=tuple(adopted),
+                                rebalanced=rebalanced, join=join)
+
+    def rebalance_parked(self, target: ServingEngine, *,
+                         max_sessions: int | None = None) -> list[int]:
+        """Move parked sessions from the most-loaded engines onto ``target``
+        until parked load is level (each engine at the cluster-wide mean) —
+        zero re-prefill: the KV slice moves through the store, decode
+        continues bit-identically. Least-recently-active sessions move
+        first (they are the least likely to be resumed where they are).
+        When the target cannot slot an adoptee immediately, its slice is
+        additionally replicated onto the target node's idle tier so the
+        eventual resume is node-local. Returns moved sids."""
+        others = [e for e in self.engines.values() if e is not target]
+        if not others:
+            return []
+        donors = {e: sorted(e.parked_sids(),
+                            key=lambda s, e=e: e.sessions[s].last_active,
+                            reverse=True)
+                  for e in others}
+        total = (sum(len(v) for v in donors.values())
+                 + len(target.parked_sids()))
+        fair = total // len(self.engines)
+        want = fair - len(target.parked_sids())
+        if max_sessions is not None:
+            want = min(want, max_sessions)
+        moved: list[int] = []
+        while want > 0:
+            donor = max(others, key=lambda e: (len(donors[e]), -e.node))
+            if len(donors[donor]) <= fair:
+                break                        # everyone is at (or under) fair
+            sid = donors[donor].pop()        # least-recently-active first
+            sess = donor.sessions.get(sid)
+            name = _cache_name(sid)
+            if sess is None or sess.done or sess.slot is not None \
+                    or not self.store.exists(name) or sid in target.sessions:
+                continue
+            value, _ = self.store.get(name)             # metadata read
+            if not isinstance(value, KVSlice) or value.state is None \
+                    or not target.compatible_state(value.state):
+                continue
+            del donor.sessions[sid]
+            if not target.adopt(sid, prompt_len=sess.prompt_len,
+                                tokens=sess.tokens):
+                donor.sessions[sid] = sess   # restore the registration
+                continue
+            if target.sessions[sid].slot is None:
+                # adopted parked (target saturated): stage a local replica
+                # so the eventual resume/warm reads node-local bytes
+                self.store.replicate(name, [target.node],
+                                     tier=target.idle_tier)
+            moved.append(sid)
+            self.rebalanced_sessions += 1
+            want -= 1
+        return moved
 
     def warm(self, sid: int) -> bool:
         """Promote a parked session's KV back toward the top tier ahead of
@@ -752,13 +896,17 @@ class Router:
         sess = eng.sessions.get(sid) if eng is not None else None
         if sess is None or sess.done or sess.slot is not None:
             return False
+        p = self.store.stat(name)
+        if not p.resident_on(node):
+            # off-node-only slice: a warm cannot help — both paths must
+            # agree (the prefetch path used to count these as warmups,
+            # making the stat depend on whether a PrefetchEngine happened
+            # to be attached)
+            return False
         if self.prefetch is not None:
             self.prefetch.submit(name, node, tier=self.store.hierarchy.top)
             self.warmups += 1
             return True
-        p = self.store.stat(name)
-        if not p.resident_on(node):
-            return False
         if p.tier_on(node) != self.store.hierarchy.top:
             self.store.promote(name, node, tier=self.store.hierarchy.top)
         self.warmups += 1

@@ -238,6 +238,12 @@ class InterArrivalPredictor:
         per-session gap has been seen; None before any gap at all)."""
         return self._ema.get(session, self._global)
 
+    def last_seen(self, session: int) -> float | None:
+        """Timestamp of the session's last observed arrival (None if never
+        seen) — lets a late subscriber (e.g. a joining engine seeding warms
+        for migrated sessions) anchor ``predict()`` to the real clock."""
+        return self._last.get(session)
+
 
 # ----------------------------------------------------------------- synthetic
 @dataclasses.dataclass(frozen=True)
@@ -250,6 +256,9 @@ class CostModel:
     prefill_base_s: float = 0.012
     prefill_per_token_s: float = 0.00035
     decode_per_token_s: float = 0.010
+    # cold-start cost of an engine joining mid-trace: loading model params
+    # onto the accelerator before the first request can be served
+    join_params_load_s: float = 8.0
 
     def prefill_seconds(self, n_tokens: int) -> float:
         return self.prefill_base_s + self.prefill_per_token_s * n_tokens
@@ -370,7 +379,7 @@ def build_trace_stack(*, n_engines: int = 4, max_batch: int = 8,
 
 
 # -------------------------------------------------------------------- driver
-_ARRIVAL, _WARM, _FAIL, _WAKE = 0, 1, 2, 3
+_ARRIVAL, _WARM, _FAIL, _WAKE, _JOIN, _JOIN_READY = 0, 1, 2, 3, 4, 5
 
 
 @dataclasses.dataclass
@@ -450,6 +459,8 @@ class TraceDriver:
                  predictor: InterArrivalPredictor | None = None,
                  warm_lead: float = 0.05,
                  failures: Sequence[tuple[float, int]] = (),
+                 joins: Sequence[tuple[float, int]] = (),
+                 engine_factory: Callable[[int], ServingEngine] | None = None,
                  drain_every: int = 256, max_history: int = 2048) -> None:
         self.router = router
         self.store = router.store
@@ -460,9 +471,14 @@ class TraceDriver:
         self.predictor = predictor or InterArrivalPredictor()
         self.warm_lead = warm_lead
         self.failures = list(failures)
+        self.joins = list(joins)
+        self.engine_factory = engine_factory
         self.drain_every = drain_every
         self.max_history = max_history
         any_engine = next(iter(router.engines.values()))
+        # template for join-built engines — captured now so joins still work
+        # in the all-engines-down window
+        self._engine_template = any_engine
         self.kv = any_engine.slot_bytes()
         self._sess: dict[int, _SessState] = {}
         self._by_sid: dict[int, int] = {}
@@ -472,6 +488,10 @@ class TraceDriver:
         self._ttft: list[float] = []
         self._queue: list[float] = []
         self._resume: list[float] = []
+        # (effective issue time, ttft seconds) per request, in completion
+        # order — the recovery-window analysis in bench_membership needs the
+        # time series, not just end-of-run percentiles
+        self.samples: list[tuple[float, float]] = []
         self._t_end = 0.0
         self.counters: dict[str, float] = {
             k: 0.0 for k in ("new_sessions", "followups", "live_hits",
@@ -479,7 +499,8 @@ class TraceDriver:
                              "finished", "force_finished",
                              "engine_full_errors", "warms", "warm_hits",
                              "resume_hidden_s", "failover_resumed",
-                             "failover_lost")}
+                             "failover_lost", "failover_deferred",
+                             "joins", "adopted_on_join", "rebalanced")}
 
     # ------------------------------------------------------------- plumbing
     def _media(self, tier: str) -> float:
@@ -533,7 +554,9 @@ class TraceDriver:
         client is still reading); that shift is think time, not server
         latency. ``start - t_eff`` is therefore pure engine-queue wait."""
         self._queue.append(start - t_eff)
-        self._ttft.append((start - t_eff) + svc + self.cost.decode_seconds(1))
+        ttft = (start - t_eff) + svc + self.cost.decode_seconds(1)
+        self._ttft.append(ttft)
+        self.samples.append((t_eff, ttft))
         if resume_lat is not None:
             self._resume.append(resume_lat)
 
@@ -545,6 +568,60 @@ class TraceDriver:
         self._busy.pop(node, None)
         self.counters["failover_resumed"] += len(rep.resumed)
         self.counters["failover_lost"] += len(rep.lost)
+        self.counters["failover_deferred"] += len(rep.deferred)
+
+    def _make_engine(self, node: int) -> ServingEngine:
+        """Build the engine for a join: the caller's factory, or a clone of
+        the construction-time template (same config/params/backend, fresh
+        per-engine state) bound to the joining node."""
+        if self.engine_factory is not None:
+            return self.engine_factory(node)
+        ref = self._engine_template
+        return ServingEngine(ref.cfg, ref.params, config=ref.config,
+                             node=node, store=self.store,
+                             backend=ref.backend)
+
+    def _handle_join(self, t: float, node: int) -> None:
+        """The node announces itself: its params load starts now, but
+        membership flips only when the load completes (saxml-style — a
+        server is not routable until the model is resident). Joining the
+        router at announce time would let the rebalance yank sessions onto
+        a cold engine whose queue then head-of-line-blocks behind the whole
+        params load."""
+        if node in self.router.engines:
+            return                       # already a live member
+        heapq.heappush(self._events,
+                       (t + self.cost.join_params_load_s, next(self._seq),
+                        _JOIN_READY, node))
+
+    def _handle_join_ready(self, t: float, node: int) -> None:
+        if node in self.router.engines:
+            return                       # already a live member
+        eng = self._make_engine(node)
+        rep = self.router.join_engine(node, eng)
+        self.counters["joins"] += 1
+        self.counters["adopted_on_join"] += len(rep.adopted)
+        self.counters["rebalanced"] += len(rep.rebalanced)
+        if not self.warm_enabled:
+            return
+        # seed the warm predictor for migrated sessions: their next arrival
+        # is predicted from the pre-failure issue pattern, anchored at the
+        # last observed arrival
+        for sid in (*rep.adopted, *rep.rebalanced):
+            session = self._by_sid.get(sid)
+            if session is None:
+                continue
+            st = self._sess.get(session)
+            if st is None or not st.alive or st.sid != sid:
+                continue
+            gap = self.predictor.predict(session)
+            if gap is None:
+                continue
+            last = self.predictor.last_seen(session)
+            anchor = last if last is not None else t
+            tw = max(anchor + gap - self.warm_lead, t + 1e-6)
+            heapq.heappush(self._events,
+                           (tw, next(self._seq), _WARM, session))
 
     def _handle_warm(self, t: float, session: int) -> None:
         s = self._sess.get(session)
@@ -671,6 +748,10 @@ class TraceDriver:
                         for r in self.trace]
         for t, node in self.failures:
             self._events.append((float(t), next(self._seq), _FAIL, int(node)))
+        # joins pushed after failures: a same-instant fail-then-join cycle
+        # processes the failure first (seq breaks the time tie)
+        for t, node in self.joins:
+            self._events.append((float(t), next(self._seq), _JOIN, int(node)))
         heapq.heapify(self._events)
         processed = 0
         while self._events:
@@ -681,6 +762,10 @@ class TraceDriver:
                 self._handle_warm(t, payload)
             elif kind == _WAKE:
                 self._handle_wake(t, payload)
+            elif kind == _JOIN:
+                self._handle_join(t, payload)
+            elif kind == _JOIN_READY:
+                self._handle_join_ready(t, payload)
             else:
                 self._handle_fail(t, payload)
             processed += 1

@@ -429,7 +429,10 @@ class TestServingFailover:
         want_next = tok.get(sid)
         assert want_next is not None, "decode continues after late resume"
 
-    def test_incompatible_slot_shape_not_adopted(self, setup):
+    def test_incompatible_slot_shape_deferred_not_lost(self, setup):
+        # a durable slice no *currently registered* engine can load is not
+        # forfeited: it parks unhomed (failover_deferred) and the next
+        # compatible join_engine adopts it without a prefill
         cfg, params = setup
         kv = ServingEngine(cfg, params, max_batch=2, max_seq=64).slot_bytes()
         store = _failover_store(kv)
@@ -441,4 +444,14 @@ class TestServingFailover:
         sid = a.submit([5, 6, 7])
         a.park(sid)
         rep = router.fail_engine(0)
-        assert rep.lost == (sid,) and rep.resumed == ()
+        assert rep.deferred == (sid,) and rep.resumed == () and rep.lost == ()
+        assert router.failover_deferred == 1 and router.failover_lost == 0
+        assert store.exists(_cache_name(sid)), \
+            "the durable slice must survive the no-compatible-home window"
+        # a compatible engine joins: the deferred session is adopted
+        c = ServingEngine(cfg, params, max_batch=2, max_seq=64, node=2,
+                          store=store)
+        jrep = router.join_engine(2, c)
+        assert jrep.adopted == (sid,)
+        assert router.failover_resumes == 1
+        assert c.sessions[sid].slot is not None, "free slot: resumed"

@@ -1,0 +1,398 @@
+"""Elastic cluster membership (PR 8): live node/engine join, rebalance,
+re-replication.
+
+Covers the membership lifecycle end to end: storage-layer join/rejoin
+determinism, the placement-skew bugfix (alive-list remap instead of linear
+probing), risk-aware re-replication ordering toward newcomers, the
+simulator's incremental cached-view absorption, router-level engine joins
+(deferred-slice adoption, zero-re-prefill rebalance with bit-identical
+decode), the ``warm()`` residency-guard parity fix, and a trace-driver
+fail-then-join run recovering pre-failure tail latency.
+"""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import HPC_CLUSTER
+from repro.core.config import ServingConfig
+from repro.core.locstore import (LocStore, SimObject, _stable_hash,
+                                 tiered_hierarchy)
+from repro.core.prefetch import PrefetchEngine
+from repro.core.simulator import SimCluster
+from repro.serve.engine import Router, ServingEngine, _cache_name
+from repro.serve.traffic import (MiB, SyntheticBackend, TraceConfig,
+                                 TraceDriver, build_trace_stack,
+                                 generate_trace)
+
+KV = 4 * MiB
+
+
+def _store(n_nodes=4, **kw):
+    kw.setdefault("hierarchy", tiered_hierarchy(
+        hbm_bytes=4 * KV, host_bytes=8 * KV, bb_bytes=float(1 << 30)))
+    kw.setdefault("write_policy", "back")
+    kw.setdefault("durability", "flush_before_ack")
+    return LocStore(n_nodes, **kw)
+
+
+def _engine(store, node, max_batch=2, width=4):
+    cfg = ServingConfig(max_batch=max_batch, max_seq=1 << 20)
+    return ServingEngine(None, None, config=cfg, node=node, store=store,
+                         backend=SyntheticBackend(kv_bytes=KV, width=width))
+
+
+# ---------------------------------------------------------------- storage
+class TestStorageJoin:
+    def test_rejoin_is_deterministic_and_cold(self):
+        st = _store()
+        st.put("a", SimObject(KV), loc=1)
+        st.pin("a", 1)
+        st.drop_node(1)
+        rep = st.join_node(1)
+        assert rep.rejoined and not rep.grew
+        # same node id rejoins with empty tiers and cleared pin refcounts
+        for tier in st.hierarchy.names():
+            if st.hierarchy.is_node_tier(tier):
+                assert st.tier_used(1, tier) == 0.0
+        assert not st.is_pinned("a", 1)
+        assert st.failed_nodes == frozenset()
+
+    def test_join_event_published(self):
+        st = _store()
+        seen = []
+        st.loc.subscribe(lambda e, k, p: seen.append((e, k)))
+        st.drop_node(2)
+        st.join_node(2)
+        assert seen[-1] == ("join_node", 2)
+        assert ("drop_node", 2) in seen
+
+    def test_growth_join_extends_cluster(self):
+        st = _store(n_nodes=4)
+        rep = st.join_node(7)
+        assert rep.grew and not rep.rejoined
+        assert st.n_nodes == 8
+        st.put("x", SimObject(KV), loc=7)     # the new id accepts placements
+        assert st.stat("x").resident_on(7)
+        # gapped growth: the skipped ids did NOT join — they sit in the
+        # failed set until their own join/revive admits them
+        assert st.failed_nodes == frozenset({4, 5, 6})
+        assert st.revive_node(5).rejoined
+        assert st.failed_nodes == frozenset({4, 6})
+
+    def test_revive_requires_a_failed_node(self):
+        st = _store()
+        with pytest.raises(ValueError):
+            st.revive_node(0)                 # alive: not a revival
+        st.drop_node(0)
+        assert st.revive_node(0).rejoined
+
+    def test_placement_reopens_to_rejoined_node(self):
+        st = _store(n_nodes=4)
+        st.drop_node(2)
+        assert all(st._default_placement(f"k{i}").nodes[0] != 2
+                   for i in range(200))
+        st.join_node(2)
+        assert any(st._default_placement(f"k{i}").nodes[0] == 2
+                   for i in range(200))
+
+
+class TestPlacementSkew:
+    """Satellite bugfix: default placement must stay near-uniform over the
+    survivors — the old linear probe handed a dead run's whole hash mass to
+    its first surviving successor."""
+
+    @pytest.mark.parametrize("policy", ["hash", "rr"])
+    def test_near_uniform_with_half_the_nodes_failed(self, policy):
+        n, trials = 8, 8000
+        st = LocStore(n, default_policy=policy)
+        for node in range(n // 2):            # nodes 0..3 die: a dead RUN,
+            st.drop_node(node)                # the linear probe's worst case
+        counts = collections.Counter(
+            st._default_placement(f"obj-{i}").nodes[0]
+            for i in range(trials))
+        assert set(counts) <= set(range(n // 2, n))
+        expected = trials / (n - n // 2)
+        for node, c in counts.items():
+            assert abs(c - expected) < 0.15 * expected, (
+                f"node {node} got {c} of {trials} placements "
+                f"(expected ~{expected:.0f}) — survivor skew")
+
+    def test_identical_to_original_when_healthy(self):
+        # alive == range(n): the remap must reproduce hash % n exactly, so
+        # healthy-cluster placements (and every test pinning them) hold
+        st = LocStore(8)
+        for i in range(64):
+            name = f"data-{i}"
+            assert (st._default_placement(name).nodes[0]
+                    == _stable_hash(name) % 8)
+
+
+class TestRereplication:
+    def test_sole_copy_dirty_first_then_clean_largest_first(self):
+        st = LocStore(4, write_policy="back")
+        st.put("dirty_small", SimObject(10.0), loc=0)
+        st.put("dirty_big", SimObject(100.0), loc=1)
+        st.put("clean_big", SimObject(900.0), loc=0)
+        st.put("replicated", SimObject(50.0), loc=(0, 1))
+        st.put("around", SimObject(40.0), loc=2, mode="around")
+        st.fsync(["clean_big"])
+        st.join_node(3)
+        names = [c[0] for c in st.rereplication_candidates(3)]
+        # dirty sole copies first (largest first), clean after; multi-replica
+        # and write-around objects are never candidates
+        assert names == ["dirty_big", "dirty_small", "clean_big"]
+
+    def test_budget_is_greedy_and_skips_too_big(self):
+        st = LocStore(3, write_policy="back")
+        st.put("huge", SimObject(1000.0), loc=0)
+        st.put("mid", SimObject(100.0), loc=0)
+        st.put("tiny", SimObject(10.0), loc=1)
+        st.join_node(2)
+        names = [c[0] for c in
+                 st.rereplication_candidates(2, max_bytes=150.0)]
+        assert names == ["mid", "tiny"]   # huge skipped, budget keeps filling
+
+    def test_rereplicate_to_lands_copies_and_counts(self):
+        st = LocStore(3, write_policy="back")
+        st.put("d", SimObject(64.0), loc=0)
+        st.join_node(2)
+        done = st.rereplicate_to(2)
+        assert done == ("d",)
+        assert st.stat("d").resident_on(2)
+        assert st.stat("d").tier_on(2) == st.hierarchy.bottom
+        assert st.rereplications == 1 and st.bytes_rereplicated == 64.0
+        assert st.movement_report()["rereplications"] == 1.0
+
+    def test_failed_sources_are_not_candidates(self):
+        st = LocStore(4, write_policy="back")
+        st.put("gone", SimObject(8.0), loc=1)
+        st.drop_node(1)                       # the sole copy died with it
+        st.join_node(3)
+        assert st.rereplication_candidates(3) == []
+
+
+# -------------------------------------------------------------- simulator
+class TestSimClusterJoin:
+    def test_rejoin_absorbs_into_cached_views(self):
+        c = SimCluster(4, HPC_CLUSTER, LocStore(4))
+        assert list(c.free_workers()) == [0, 1, 2, 3]   # caches built
+        c.fail(1)
+        assert list(c.alive_nodes()) == [0, 2, 3]
+        c.join(1)
+        assert list(c.free_workers()) == [0, 1, 2, 3]
+        assert list(c.alive_nodes()) == [0, 1, 2, 3]
+
+    def test_growth_join_extends_link_rows_in_place(self):
+        c = SimCluster(4, HPC_CLUSTER, LocStore(4))
+        row_before, _ = c.link_row(0)
+        assert len(row_before) == 4
+        c.join(5)
+        assert c.n_nodes == 6
+        row_after, _ = c.link_row(0)
+        assert len(row_after) == 6
+        assert row_after[5] == HPC_CLUSTER.link_gbps(0, 5)
+        assert list(c.alive_nodes()) == [0, 1, 2, 3, 5]
+        # the incremental insert and a from-scratch rebuild must agree on
+        # the skipped id: node 4 never joined
+        c._alive_cache = None
+        assert list(c.alive_nodes()) == [0, 1, 2, 3, 5]
+        assert 4 in c.failed
+
+    def test_join_of_live_member_is_a_noop(self):
+        c = SimCluster(2, HPC_CLUSTER, LocStore(2))
+        c.acquire(0)                          # node 0 is busy
+        c.join(0)
+        assert list(c.free_workers()) == [1], \
+            "a live busy node must stay busy"
+
+
+# ----------------------------------------------------------------- router
+class TestEngineJoin:
+    def test_join_validations(self):
+        st = _store()
+        router = Router([_engine(st, 0)], st)
+        with pytest.raises(ValueError):
+            router.join_engine(0, _engine(st, 0))        # already present
+        with pytest.raises(ValueError):
+            router.join_engine(2, _engine(st, 1))        # wrong binding
+        with pytest.raises(ValueError):
+            router.join_engine(2, _engine(_store(), 2))  # foreign store
+
+    def test_all_engines_down_then_join_adopts_deferred(self):
+        st = _store(n_nodes=4)
+        a = _engine(st, 0)
+        router = Router([a], st)
+        sid = a.submit([3, 1, 4])
+        for _ in range(2):
+            a.step()
+        a.park(sid)
+        tokens_before = list(a.sessions[sid].tokens)
+        rep = router.fail_engine(0)           # NO engine left at all
+        assert rep.deferred == (sid,) and rep.lost == ()
+        assert router.engines == {}
+        assert st.exists(_cache_name(sid))
+        jrep = router.join_engine(1, _engine(st, 1))
+        assert jrep.adopted == (sid,)
+        assert jrep.join.rejoined is False
+        eng = router.engines[1]
+        assert eng.sessions[sid].slot is not None
+        tok = eng.step()
+        assert sid in tok, "adopted session decodes on the newcomer"
+        assert eng.sessions[sid].tokens[:len(tokens_before)] == tokens_before
+        assert eng.prefills == 0, "adoption must not pay a prefill"
+
+    def test_rebalance_is_zero_reprefill_and_bit_identical(self):
+        # control: park/resume on one engine, no membership events at all
+        ctrl = _engine(_store(), 0)
+        sid_c = ctrl.submit([7, 7, 2])
+        for _ in range(3):
+            ctrl.step()
+        ctrl.park(sid_c)
+        ctrl.resume(sid_c)
+        for _ in range(3):
+            ctrl.step()
+        want = list(ctrl.sessions[sid_c].tokens[:7])
+
+        st = _store(n_nodes=4)
+        a = _engine(st, 0)
+        router = Router([a], st)
+        sid = a.submit([7, 7, 2])
+        extra = a.submit([9, 9])              # a second parked donor session
+        for _ in range(3):
+            a.step()
+        a.park(sid)
+        a.park(extra)
+        prefills_before = a.prefills
+        c = _engine(st, 2)
+        jrep = router.join_engine(2, c)
+        # 2 parked over 2 engines -> fair share is one each: one moves
+        assert jrep.rebalanced == (sid,), \
+            "least-recently-active parked session moves first"
+        assert (sum(e.prefills for e in router.engines.values())
+                == prefills_before), "rebalance must be zero-re-prefill"
+        assert sid not in a.sessions and sid in c.sessions
+        if c.sessions[sid].slot is None:
+            c.resume(sid)
+        for _ in range(3):
+            c.step()
+        assert c.sessions[sid].tokens[:7] == want, \
+            "decode after rebalance must be bit-identical"
+        assert router.rebalanced_sessions == 1
+
+    def test_rebalance_stages_local_replica_when_saturated(self):
+        st = _store(n_nodes=4)
+        a = _engine(st, 0, max_batch=4)
+        router = Router([a], st)
+        for i in range(4):
+            s = a.submit([5 + i, 3])
+            a.park(s)
+        c = _engine(st, 1, max_batch=1)       # joins with ONE slot
+        jrep = router.join_engine(1, c)
+        assert len(jrep.rebalanced) == 2      # fair = 4 parked // 2 engines
+        still_parked = [s for s in jrep.rebalanced
+                        if c.sessions[s].slot is None]
+        assert still_parked, "one adoptee must exceed the single slot"
+        for s in still_parked:
+            assert st.stat(_cache_name(s)).resident_on(1), \
+                "saturated-target adoptee gets a node-local replica staged"
+
+    def test_migration_before_join_supersedes_deferred_slice(self):
+        st = _store(n_nodes=4)
+        a = _engine(st, 0)
+        b = _engine(st, 1, width=8)           # incompatible slot shape
+        router = Router([a, b], st)
+        sid = a.submit([2, 2, 2])
+        a.park(sid)
+        rep = router.fail_engine(0)
+        assert rep.deferred == (sid,)
+        assert sid in router._unhomed
+        # the session re-prefills (migrates) before any compatible join:
+        d = router.follow_up(sid, [2, 2, 2, 9])
+        assert d.prefilled and d.sid != sid
+        assert sid not in router._unhomed
+        assert not st.exists(_cache_name(sid)), "stale slice cleaned up"
+
+
+class TestWarmParity:
+    """Satellite bugfix: both warm() paths apply the same residency guard."""
+
+    def _parked_session(self, with_prefetch):
+        st = _store(n_nodes=4)
+        eng = _engine(st, 0)
+        pf = PrefetchEngine(st) if with_prefetch else None
+        router = Router([eng], st, prefetch=pf)
+        sid = eng.submit([6, 6])
+        eng.park(sid)
+        return st, router, sid
+
+    @pytest.mark.parametrize("with_prefetch", [False, True],
+                             ids=["sync", "prefetch"])
+    def test_offnode_only_slice_is_not_warmable(self, with_prefetch):
+        st, router, sid = self._parked_session(with_prefetch)
+        # strand the slice off-node: its only replica moves to node 2
+        st.migrate(_cache_name(sid), 2)
+        assert router.warm(sid) is False
+        assert router.warmups == 0, \
+            "off-node-only slices must not count as warmed on either path"
+
+    @pytest.mark.parametrize("with_prefetch", [False, True],
+                             ids=["sync", "prefetch"])
+    def test_resident_parked_slice_warms_on_both_paths(self, with_prefetch):
+        st, router, sid = self._parked_session(with_prefetch)
+        assert router.warm(sid) is True
+        assert router.warmups == 1
+
+
+# ----------------------------------------------------------------- driver
+class TestTraceFailThenJoin:
+    def _run(self, trace, *, failures=(), joins=()):
+        router, store = build_trace_stack(
+            n_engines=3, max_batch=8, kv_bytes=KV, tiered=True,
+            bb_slots_per_node=64, durability="flush_before_ack")
+        driver = TraceDriver(router, trace, warm=True, failures=failures,
+                             joins=joins)
+        return driver.run(), router, driver
+
+    def test_fail_then_join_restores_pre_failure_p99_ttft(self):
+        cfg = TraceConfig(n_sessions=600, followups_per_session=1.5,
+                          req_rate=45.0, arrival="bursty", seed=11)
+        trace = generate_trace(cfg)
+        t_mid = trace[len(trace) // 2].t
+        t_join = t_mid + 4.0
+        base, _, base_driver = self._run(trace)
+        fj, router, driver = self._run(trace, failures=((t_mid, 0),),
+                                       joins=((t_join, 0),))
+        assert len(router.engines) == 3, "the cluster is back at full size"
+        assert driver.counters["joins"] == 1
+        s_fj = fj.summary()
+        assert s_fj["engine_full_errors"] == 0
+        assert (s_fj["failover_resumed"] + s_fj["failover_deferred"]
+                + s_fj["failover_lost"]) > 0, "the failure must bite"
+        # recovery: once the newcomer's params are loaded and the backlog
+        # drains, the p99 TTFT of the remaining traffic is back to the
+        # no-failure profile
+        settle = t_join + 10.0
+        base_p99 = float(np.percentile(
+            [lat for _, lat in base_driver.samples], 99))
+        rec = [lat for t, lat in driver.samples if t >= settle]
+        assert len(rec) > 100, "the trace must extend past the recovery"
+        rec_p99 = float(np.percentile(rec, 99))
+        assert rec_p99 <= 1.2 * base_p99, (
+            f"post-join p99 TTFT {rec_p99 * 1e3:.1f}ms vs no-failure "
+            f"{base_p99 * 1e3:.1f}ms — recovery too slow")
+
+    def test_join_grows_capacity_for_new_arrivals(self):
+        # long enough that arrivals keep coming well past the newcomer's
+        # ready point (join + params load: the engine only becomes routable
+        # once the model is resident)
+        cfg = TraceConfig(n_sessions=700, followups_per_session=1.0,
+                          req_rate=40.0, seed=5)
+        trace = generate_trace(cfg)
+        t_mid = trace[len(trace) // 2].t
+        rep, router, driver = self._run(trace, joins=((t_mid, 3),))
+        assert 3 in router.engines, "growth join registers a 4th engine"
+        assert driver.counters["joins"] == 1
+        assert router.engines[3].prefills > 0, \
+            "the newcomer must actually absorb load"

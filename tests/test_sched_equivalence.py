@@ -21,6 +21,13 @@ from repro.core.simulator import WorkflowSimulator
 from repro.core.workloads import mapreduce_workflow, random_layered_workflow
 
 FAILURES = [(20.0, 1), (60.0, 3)]
+# a full membership cycle: node 1 fails, rejoins live (clearing the failed
+# mark and re-replicating sole copies toward it), node 3 fails later and
+# stays down, and node 9 is a growth join beyond the initial n_nodes=8.
+# Times sit inside even the shortest workflow's makespan (~20s) so every
+# event actually fires.
+MEMBERSHIP = {"failures": [(4.0, 1), (12.0, 3)],
+              "joins": [(8.0, 1), (16.0, 9)]}
 
 
 def tight_hierarchy():
@@ -47,12 +54,13 @@ def build_scheduler(kind, wf):
     return FCFSScheduler(wf)
 
 
-def run_once(wf_kind, sched_kind, *, indexed, failures):
+def run_once(wf_kind, sched_kind, *, indexed, failures, joins=()):
     wf = build_workflow(wf_kind)
     sim = WorkflowSimulator(
         wf, build_scheduler(sched_kind, wf),
         n_nodes=8, hw=HPC_CLUSTER, indexed=indexed,
-        failures=list(failures), hierarchy=tight_hierarchy(),
+        failures=list(failures), joins=list(joins),
+        hierarchy=tight_hierarchy(),
         write_policy="back", coordinated_eviction=True,
         durability="fsync_on_barrier")
     return sim.run()
@@ -78,6 +86,25 @@ def test_indexed_path_is_decision_identical(wf_kind, sched_kind,
     # and every scalar counter (makespan, bytes moved/local/remote,
     # evictions, writebacks, reruns, ...) — not approximately: exactly
     assert scalar_counters(idx) == scalar_counters(ref)
+
+
+@pytest.mark.parametrize("wf_kind", ["mapreduce", "random_layered"])
+@pytest.mark.parametrize("sched_kind", ["proactive", "locality", "fcfs"])
+def test_indexed_path_identical_across_membership_cycle(wf_kind, sched_kind):
+    """A fail -> rejoin -> fail -> growth-join cycle: the join_node event
+    must let the indexed mirrors / candidate index / cached cluster views
+    absorb the newcomer with the exact decisions the full-rescan reference
+    makes — including the background re-replication transfers toward it."""
+    ref = run_once(wf_kind, sched_kind, indexed=False, **MEMBERSHIP)
+    idx = run_once(wf_kind, sched_kind, indexed=True, **MEMBERSHIP)
+    assert idx.task_records == ref.task_records
+    assert scalar_counters(idx) == scalar_counters(ref)
+    assert idx.joins == 2
+    assert idx.rereplications > 0, \
+        "the cycle must actually stage copies toward the newcomers"
+    assert [r.node for r in idx.join_reports] == [1, 9]
+    assert idx.join_reports[0].rejoined and not idx.join_reports[0].grew
+    assert idx.join_reports[1].grew and not idx.join_reports[1].rejoined
 
 
 def test_indexed_is_the_default_and_reference_is_reachable():
