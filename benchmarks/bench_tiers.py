@@ -21,10 +21,11 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (HPC_CLUSTER, LocalityScheduler, StorageHierarchy,
-                        TierSpec, compile_workflow, simulate)
+from repro.core import (HPC_CLUSTER, LocalityScheduler, SimConfig,
+                        StorageHierarchy, TierSpec, WorkflowSimulator,
+                        compile_workflow, simulate)
 from repro.core.locstore import LocStore, SimObject
-from repro.core.workloads import montage_workflow
+from repro.core.workloads import montage_workflow, pipeline_chain_workflow
 
 GB = float(1 << 30)
 REMOTE_GBPS = 0.5e9          # the paper's ~1 GB/s Lustre, shared
@@ -56,15 +57,56 @@ def run(report, quick: bool = False) -> None:
         cap = cap_gb * GB
         rf = simulate(wf, LocalityScheduler, n_nodes=4, hw=HPC_CLUSTER,
                       hierarchy=_flat(cap))
-        rt = simulate(wf, LocalityScheduler, n_nodes=4, hw=HPC_CLUSTER,
-                      hierarchy=_tiered(cap))
+        sim_t = WorkflowSimulator(
+            wf, LocalityScheduler(wf),
+            config=SimConfig(n_nodes=4, hw=HPC_CLUSTER,
+                             hierarchy=_tiered(cap)))
+        rt = sim_t.run()
+        # analyzer-gated write-around traffic (PR 9): 0 for montage, whose
+        # multi-consumer projected tiles earn no safe mode="around" pin
+        around = sum(t.nbytes for t in sim_t.store.transfers
+                     if t.kind == "writearound")
         saved = 1.0 - rt.remote_bytes / max(rf.remote_bytes, 1e-9)
         report(f"tiers/sweep/cap{cap_gb}g", 0.0,
                f"remote_gib={rt.remote_bytes/GB:.2f} "
                f"remote_flat_gib={rf.remote_bytes/GB:.2f} saved={saved:.0%} "
                f"io_wait_s={rt.io_wait_total:.1f} "
                f"io_wait_flat_s={rf.io_wait_total:.1f} "
-               f"makespan_s={rt.makespan:.1f} demotions={rt.demotions}")
+               f"makespan_s={rt.makespan:.1f} demotions={rt.demotions} "
+               f"around_saved_gib={around/GB:.2f}")
+
+    # (c) analyzer-gated write-around earns its keep (PR 9): pipeline_chain
+    # intermediates are single-consumer, so the linter proves every
+    # mode="around" pin safe and honor_write_modes="auto" (the default)
+    # streams them straight to the PFS — they never occupy node tiers, so
+    # eviction pressure drops versus the same config with pins disabled.
+    n_chains, depth = (4, 4) if quick else (8, 6)
+    wfc = compile_workflow(pipeline_chain_workflow(n_chains, depth),
+                           HPC_CLUSTER)
+    for cap_gb in caps:
+        hier = _tiered(cap_gb * GB)
+        sim_off = WorkflowSimulator(
+            wfc, LocalityScheduler(wfc),
+            config=SimConfig(n_nodes=4, hw=HPC_CLUSTER, hierarchy=hier,
+                             honor_write_modes=False))
+        r_off = sim_off.run()
+        sim_on = WorkflowSimulator(
+            wfc, LocalityScheduler(wfc),
+            config=SimConfig(n_nodes=4, hw=HPC_CLUSTER, hierarchy=hier))
+        r_on = sim_on.run()
+        around = sum(t.nbytes for t in sim_on.store.transfers
+                     if t.kind == "writearound")
+        assert around > 0, "analyzer-proven write-around pins never fired"
+        assert r_on.demotions <= r_off.demotions, (
+            "write-around increased eviction pressure: "
+            f"{r_on.demotions} > {r_off.demotions}")
+        report(f"tiers/around/cap{cap_gb}g", 0.0,
+               f"around_gib={around/GB:.2f} "
+               f"demotions={r_on.demotions} "
+               f"demotions_off={r_off.demotions} "
+               f"io_wait_s={r_on.io_wait_total:.1f} "
+               f"io_wait_off_s={r_off.io_wait_total:.1f} "
+               f"makespan_s={r_on.makespan:.1f}")
 
     # (b) store-level cyclic trace: working set 2x the host tier
     n = 32 if quick else 256

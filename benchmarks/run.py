@@ -47,7 +47,13 @@ def main() -> int:
                     help="substring filter on benchmark module name")
     ap.add_argument("--quick", action="store_true",
                     help="smoke scale: small shapes / few reps (CI)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run every simulation with the runtime invariant "
+                         "sanitizer enabled (repro.analysis.sanitize)")
     args, _ = ap.parse_known_args()
+
+    if args.sanitize:
+        os.environ["REPRO_SANITIZE"] = "1"
 
     from benchmarks import (bench_ablation, bench_failures, bench_locstore,
                             bench_membership, bench_prefetch, bench_roofline,

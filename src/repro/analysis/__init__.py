@@ -1,0 +1,17 @@
+"""Cross-layer static analysis + runtime invariant sanitizer (PR 9).
+
+``repro.analysis.lint`` proves workflow/config properties before execution
+(races, capacity infeasibility, durability hazards, unsafe write-around
+pins, cluster-config mistakes); ``repro.analysis.sanitize`` cross-checks the
+runtime's incremental caches against from-scratch rebuilds at checkpoints.
+``python -m repro.analysis`` lints every built-in workload (the CI gate).
+"""
+
+from repro.analysis.lint import (Finding, Rule, RULES, Severity,
+                                 apply_allowlist, gate, lint, lint_graph,
+                                 load_allowlist, safe_write_modes)
+from repro.analysis.sanitize import SanitizerError
+
+__all__ = ["Finding", "Rule", "RULES", "Severity", "apply_allowlist",
+           "gate", "lint", "lint_graph", "load_allowlist",
+           "safe_write_modes", "SanitizerError"]

@@ -51,10 +51,20 @@ class SimConfig:
     hierarchy: StorageHierarchy | None = None
     write_policy: str = "through"
     coordinated_eviction: bool = False
-    honor_write_modes: bool = False
+    # False: never honor compiler write-mode pins; True: honor them all
+    # (legacy PR-4 behaviour); "auto" (default): honor exactly the pins the
+    # analyzer proves safe (repro.analysis.lint.safe_write_modes), and only
+    # in configurations where write-around can pay off (a finite node tier,
+    # a locality-aware scheduler, stable membership).
+    honor_write_modes: bool | str = "auto"
     durability: str = "none"
     barrier_every: int = 1
     indexed: bool = True
+    # None: follow the REPRO_SANITIZE env var; True/False: force. When on,
+    # every incremental structure is cross-checked against a from-scratch
+    # rebuild every ``sanitize_every`` events (repro.analysis.sanitize).
+    sanitize: bool | None = None
+    sanitize_every: int = 64
 
     @classmethod
     def from_kwargs(cls, **kw) -> "SimConfig":
@@ -89,6 +99,9 @@ class ServingConfig:
     idle_tier: str = "bb"
     allow_park: bool = True
     resume_bias: float = 1.0
+    # None: follow REPRO_SANITIZE; True/False: force slot/placeholder
+    # invariant checks at every engine/router transition (PR 9 sanitizer)
+    sanitize: bool | None = None
 
     @classmethod
     def from_kwargs(cls, **kw) -> "ServingConfig":

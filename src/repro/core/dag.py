@@ -220,13 +220,29 @@ class TaskGraph:
         return path, total
 
     # ------------------------------------------------------------ utilities
-    def validate(self) -> None:
+    def validate(self, *, strict: bool = False) -> None:
+        """Raise on cycles; with ``strict=True``, also raise on consumed
+        external inputs that carry no ``@size`` hint (the compiler would
+        silently guess a 1 MiB default, which poisons every size-derived
+        estimate downstream)."""
         self.topo_order()  # raises on cycles
         for d in self.data.values():
             if d.is_external and d.size_bytes is None and d.consumers:
-                # external inputs should carry @size hints; warn via exception
-                # only when strict — compiler fills a default instead.
-                pass
+                if strict:
+                    raise ValueError(
+                        f"external input {d.name!r} is consumed by "
+                        f"{sorted(set(d.consumers))} but has no size_bytes "
+                        f"hint (strict validation; add @size or pass "
+                        f"strict=False to accept the compiler's default)")
+
+    def mark_sink(self, *names: str) -> None:
+        """Declare datasets as intended workflow outputs. The dead-dataset
+        lint flags produced-but-never-consumed datasets unless they carry
+        this mark."""
+        for name in names:
+            if name not in self.data:
+                raise KeyError(f"dataset {name!r} not declared")
+            self.data[name].xattr["sink"] = True
 
     def __len__(self) -> int:
         return len(self.tasks)

@@ -30,8 +30,8 @@ from typing import Callable, Mapping, Sequence
 from repro.core.config import SimConfig
 from repro.core.locstore import (DropReport, JoinReport, LocStore, Placement,
                                  REMOTE_TIER, SimObject)
-from repro.core.scheduler import (Assignment, ClusterView, ProactiveScheduler,
-                                  SchedulerBase)
+from repro.core.scheduler import (Assignment, ClusterView, LocalityScheduler,
+                                  ProactiveScheduler, SchedulerBase)
 from repro.core.wfcompiler import CompiledWorkflow, HardwareModel
 
 __all__ = ["SimConfig", "SimResult", "SimCluster", "WorkflowSimulator",
@@ -272,9 +272,36 @@ class WorkflowSimulator:
                           if config.proactive is None else config.proactive)
         # honor the compiler's per-dataset write-mode pins (pass 5): outputs
         # pinned "around" stream straight to the PFS instead of landing in
-        # node tiers. Opt-in — it trades the consumer's (remote) read for
-        # zero tier occupancy, which only pays off under capacity pressure.
-        self.honor_write_modes = config.honor_write_modes
+        # node tiers — trading the consumer's (remote) read for zero tier
+        # occupancy, which only pays off under capacity pressure. False:
+        # never; True: all pins, unconditionally (legacy opt-in); "auto"
+        # (default): only the pins repro.analysis proves safe, and only in
+        # configurations where the trade can win (finite node tier, a
+        # locality-aware scheduler, stable membership).
+        hwm = config.honor_write_modes
+        if hwm not in (False, True, "auto"):
+            raise ValueError(f"honor_write_modes must be True, False or "
+                             f"'auto', got {hwm!r}")
+        self.honor_write_modes = hwm
+        # in auto mode the put path additionally diverts a pin whose consumer
+        # is already bound to a DIFFERENT node at put time; explicit True
+        # keeps the unguarded PR-4 semantics
+        self._write_mode_guard = hwm == "auto"
+        if hwm is True:
+            self._write_modes: dict[str, str] = dict(wf.write_modes)
+        elif hwm == "auto":
+            self._write_modes = self._auto_write_modes(wf, config, scheduler)
+        else:
+            self._write_modes = {}
+        # runtime invariant sanitizer (repro.analysis.sanitize): opt-in via
+        # config or the REPRO_SANITIZE env var; checks every incremental
+        # structure against a from-scratch rebuild every sanitize_every events
+        if config.sanitize is None:
+            from repro.analysis.sanitize import env_enabled
+            self.sanitize = env_enabled()
+        else:
+            self.sanitize = bool(config.sanitize)
+        self.sanitize_every = max(int(config.sanitize_every), 1)
         # prefetched replicas pinned do-not-evict until their consumer runs
         self._task_pins: dict[str, list[tuple[str, int]]] = {}
         # wire the scheduler to the store's metadata events. indexed=True
@@ -405,6 +432,41 @@ class WorkflowSimulator:
                                        if n in exists_mirror)
             cand_rebuild()
             self.store.loc.subscribe(on_store_event)
+
+        def on_pin_event(event: str, key: object, placement: object) -> None:
+            # keep _task_pins mirroring the store's pin table: delete() and
+            # drop_node() release pins INSIDE the store, so the task-finish
+            # unpin for a stale mirror entry would decrement a fresh pin
+            # someone re-acquired for the same (name, node) later
+            if event == "drop":
+                for pins in self._task_pins.values():
+                    if pins:
+                        pins[:] = [p for p in pins if p[0] != key]
+            elif event == "drop_node":
+                for pins in self._task_pins.values():
+                    if pins:
+                        pins[:] = [p for p in pins if p[1] != key]
+
+        self.store.loc.subscribe(on_pin_event)
+
+        n_events = 0
+        if self.sanitize:
+            from repro.analysis import sanitize as _san
+
+        def sanitize_check() -> None:
+            _san.check_membership(self.store, self.cluster)
+            _san.check_tier_usage(self.store)
+            _san.check_ledger(self.store)
+            _san.check_pin_conservation(self.store, self._task_pins)
+            _san.check_placement_mirror(sched, self.store)
+            _san.check_term_cache(sched, self.cluster)
+            _san.check_proactive(sched, self.cluster)
+            if use_index:
+                _san.check_candidate_index(
+                    state=state, avail_count=avail_count,
+                    cand_list=cand_list, cand_set=cand_set,
+                    exists_mirror=exists_mirror, order=order,
+                    store=self.store, graph=wf.graph)
 
         def fetch_time(name: str, dst: int, t0: float) -> float:
             """Queue one input fetch on dst's NIC; returns completion time.
@@ -607,8 +669,24 @@ class WorkflowSimulator:
                 for out in wf.graph.tasks[tid].outputs:
                     pin = wf.graph.data[out].pinned_loc
                     loc = pin if pin is not None else node
-                    mode = (self.wf.write_modes.get(out)
-                            if self.honor_write_modes and pin is None else None)
+                    mode = (self._write_modes.get(out)
+                            if pin is None else None)
+                    if mode == "around" and self._write_mode_guard:
+                        # auto mode's runtime guard: the analyzer proved the
+                        # consumer SHOULD land on the producing node, but if
+                        # the scheduler has already bound it elsewhere (a
+                        # running attempt or a proactive preassignment), the
+                        # prediction is void for this put — fall back to the
+                        # normal write path rather than strand the consumer
+                        # behind a guaranteed remote read
+                        cs = wf.graph.data[out].consumers
+                        ctid = cs[0] if len(cs) == 1 else None
+                        cnode = running_at.get(ctid) if ctid else None
+                        if cnode is None and ctid is not None \
+                                and isinstance(sched, ProactiveScheduler):
+                            cnode = sched.preassignment.get(ctid)
+                        if cnode is not None and cnode != node:
+                            mode = None
                     if not self.store.exists(out):
                         self.store.put(out, SimObject(self.wf.sizes[out]),
                                        loc=loc, mode=mode)
@@ -650,11 +728,18 @@ class WorkflowSimulator:
             elif kind == _JOIN:
                 join_node(payload, now)  # type: ignore[arg-type]
             schedule_pass(now)
+            if self.sanitize:
+                n_events += 1
+                if n_events % self.sanitize_every == 0:
+                    sanitize_check()
             if done == total and not any(st == "running" for st in state.values()):
                 # drain queued failures/transfers without extending makespan
                 break
+        if self.sanitize:
+            sanitize_check()   # final checkpoint at quiescence
         if use_index:
             self.store.loc.unsubscribe(on_store_event)
+        self.store.loc.unsubscribe(on_pin_event)
 
         if done != total:
             missing = [t for t, st in state.items() if st != "done"]
@@ -692,6 +777,27 @@ class WorkflowSimulator:
             drop_reports=drop_reports,
             join_reports=join_reports,
         )
+
+    @staticmethod
+    def _auto_write_modes(wf: CompiledWorkflow, config: SimConfig,
+                          scheduler: SchedulerBase) -> dict[str, str]:
+        """The analyzer-gated default (PR 9): honor exactly the write-mode
+        pins ``repro.analysis.lint.safe_write_modes`` proves safe, and only
+        when the configuration lets write-around pay off — at least one
+        finite node tier (otherwise there is no occupancy to save), a
+        locality-aware scheduler (the co-scheduling proof assumes one), and
+        stable membership (failures/joins void the static prediction).
+        Everything else behaves exactly like ``honor_write_modes=False``."""
+        if not wf.write_modes or config.failures or config.joins:
+            return {}
+        if not isinstance(scheduler, LocalityScheduler):
+            return {}
+        hier = config.hierarchy
+        if hier is None or not any(t.capacity_bytes != float("inf")
+                                   for t in hier.tiers):
+            return {}
+        from repro.analysis.lint import safe_write_modes
+        return safe_write_modes(wf)
 
     def _invalidate(self, tid: str, state: dict, unfinished_preds: dict,
                     ready: set, running_at: dict) -> int:

@@ -151,14 +151,17 @@ class CompiledWorkflow:
         }
 
 
-def compile_workflow(graph: TaskGraph, hw: HardwareModel = TPU_V5E) -> CompiledWorkflow:
+def compile_workflow(graph: TaskGraph, hw: HardwareModel = TPU_V5E, *,
+                     strict: bool = False) -> CompiledWorkflow:
     """Run the paper's static-analysis passes over ``graph``.
 
     Mutates ``graph`` in place (fills ``DataSpec.size_bytes``,
     ``TaskSpec.est_flops``, ``TaskSpec.est_seconds``) and returns the bundled
-    :class:`CompiledWorkflow`.
+    :class:`CompiledWorkflow`. ``strict=True`` refuses consumed external
+    inputs without ``@size`` hints instead of defaulting them to 1 MiB.
     """
-    topo = graph.topo_order()  # also validates acyclicity
+    graph.validate(strict=strict)  # cycles; size hints when strict
+    topo = graph.topo_order()
 
     # -- pass 1: dataset size propagation via @size + @input-output-ratio ----
     sizes: dict[str, float] = {}

@@ -48,6 +48,7 @@ def fig2_workflow(input_bytes: float = 4 * GB, *,
                hints=task(compute=C("nlogn"), io_ratio=0.1))
     g.add_task("merge", inputs=("ra", "rb"), outputs=("result",),
                hints=task(compute=C("linear"), io_ratio=1.0))
+    g.mark_sink("result")
     return g
 
 
@@ -68,6 +69,7 @@ def mapreduce_workflow(n_map: int = 64, n_reduce: int = 8,
                    hints=task(compute=C("linear"), io_ratio=0.05))
     g.add_task("collect", inputs=tuple(f"out{j}" for j in range(n_reduce)),
                outputs=("final",), hints=task(compute=C("linear")))
+    g.mark_sink("final")
     return g
 
 
@@ -93,6 +95,7 @@ def montage_workflow(width: int = 32, tile_bytes: float = 256 * MB, *,
                                                      io_ratio=1.0))
     g.add_task("coadd", inputs=tuple(f"corr{i}" for i in range(width)),
                outputs=("mosaic",), hints=task(compute=C("linear"), io_ratio=0.5))
+    g.mark_sink("mosaic")
     return g
 
 
@@ -124,6 +127,9 @@ def random_layered_workflow(n_layers: int = 8, width: int = 16, *,
         prev = cur
     g.add_task("sink", inputs=tuple(prev), outputs=("final",),
                hints=task(compute=C("linear"), io_ratio=0.01))
+    # only the last layer feeds the sink; unsampled d<layer>_<i> outputs are
+    # intentionally dead (see analysis_allowlist.json)
+    g.mark_sink("final")
     return g
 
 
@@ -158,6 +164,7 @@ def serving_session_workflow(n_sessions: int = 8, n_turns: int = 4, *,
                        inputs=(f"kv{s}_{t-1}", f"prompt{s}_{t}"),
                        outputs=(f"kv{s}_{t}",),
                        hints=task(compute=C("linear")))
+        g.mark_sink(f"kv{s}_{n_turns - 1}")   # last turn's KV is the result
     return g
 
 
@@ -187,6 +194,7 @@ def pipeline_chain_workflow(n_chains: int = 8, depth: int = 6, *,
         finals.append(prev)
     g.add_task("join", inputs=tuple(finals), outputs=("final",),
                hints=task(compute=C("linear"), io_ratio=0.05))
+    g.mark_sink("final")
     return g
 
 
@@ -219,5 +227,8 @@ def training_epoch_workflow(n_steps: int = 8, n_dp: int = 4, *,
             g.add_task(f"ckpt_{s}", inputs=(new_params,),
                        outputs=(f"ckpt_file_{s}",),
                        hints=task(compute="const", io_ratio=1.0))
+            g.mark_sink(f"ckpt_file_{s}")
         prev_params = new_params
+    if not g.data[prev_params].consumers:   # epoch length not a ckpt multiple
+        g.mark_sink(prev_params)
     return g

@@ -292,6 +292,19 @@ class ServingEngine:
         self.prefill_seconds: float | None = None   # EMA of measured prefills
         self._clock = 0
         self._slot_nbytes: float | None = None
+        # runtime invariant sanitizer (repro.analysis.sanitize): slot and
+        # placeholder cross-checks after every state transition — opt-in via
+        # config.sanitize, falling back to the REPRO_SANITIZE env var
+        if config.sanitize is None:
+            from repro.analysis.sanitize import env_enabled
+            self._sanitize = env_enabled()
+        else:
+            self._sanitize = bool(config.sanitize)
+
+    def _sanitize_check(self) -> None:
+        if self._sanitize:
+            from repro.analysis import sanitize as _san
+            _san.check_engine(self)
 
     # ---------------------------------------------------------- KV geometry
     def _slot_template(self) -> Pytree:
@@ -362,6 +375,7 @@ class ServingEngine:
             self.store.put(_cache_name(sid),
                            KVSlice(None, self.slot_bytes()), loc=self.node,
                            xattr=self._cache_xattr(sid))
+        self._sanitize_check()
         return sid
 
     # ------------------------------------------------------ park / resume
@@ -386,6 +400,7 @@ class ServingEngine:
         s.slot = None
         self._slotted.pop(sid, None)
         self.parks += 1
+        self._sanitize_check()
 
     def park_lru(self) -> int | None:
         """Park the least-recently-active slotted session (to make room).
@@ -464,6 +479,7 @@ class ServingEngine:
         # the top tier (the authoritative KV is in the engine slot now)
         self.store.put(_cache_name(sid), KVSlice(None, self.slot_bytes()),
                        loc=self.node, xattr=self._cache_xattr(sid))
+        self._sanitize_check()
         return True
 
     # ---------------------------------------------------------------- decode
@@ -486,6 +502,7 @@ class ServingEngine:
             if tok == self.eos_id or \
                     s.prompt_len + len(s.tokens) >= self.max_seq - 1:
                 self.finish(s.sid)
+        self._sanitize_check()
         return out
 
     def finish(self, sid: int) -> list[int]:
@@ -498,6 +515,7 @@ class ServingEngine:
             self._slotted.pop(sid, None)
             if self.store is not None:
                 self.store.delete(_cache_name(sid))
+            self._sanitize_check()
         return s.tokens
 
     def generate(self, prompt: list[int], max_new: int = 16) -> list[int]:
@@ -591,6 +609,17 @@ class Router:
         # sid -> (prompt_len, tokens) of sessions whose durable slice
         # survived a failover but had no compatible home at the time
         self._unhomed: dict[int, tuple[int, list[int]]] = {}
+        # cross-engine invariant checks after route/failover/join transitions
+        if config.sanitize is None:
+            from repro.analysis.sanitize import env_enabled
+            self._sanitize = env_enabled()
+        else:
+            self._sanitize = bool(config.sanitize)
+
+    def _sanitize_check(self) -> None:
+        if self._sanitize:
+            from repro.analysis import sanitize as _san
+            _san.check_router(self)
 
     # ------------------------------------------------------------ cost model
     def _resume_cost(self, eng: ServingEngine, name: str) -> float:
@@ -694,6 +723,7 @@ class Router:
         eng = d.engine
         if d.kind in ("hit_live", "hit_parked"):
             resumed = self.ensure_active(eng, sid)
+            self._sanitize_check()
             return dataclasses.replace(d, resumed=resumed)
         # migration: the cache holder (if any) discards its copy
         for e in self.engines.values():
@@ -710,6 +740,7 @@ class Router:
         if not eng.can_admit():     # engine_for made room already unless flat
             raise RuntimeError("engine full")
         new_sid = eng.submit(history)
+        self._sanitize_check()
         return dataclasses.replace(d, sid=new_sid, prefilled=True)
 
     # -------------------------------------------------------------- failover
@@ -778,6 +809,7 @@ class Router:
                     # placeholder (state=None) whose authoritative KV died
                     # in the engine's slot memory
                     self.store.delete(name)
+        self._sanitize_check()
         return FailoverReport(node=node, resumed=tuple(resumed),
                               lost=tuple(lost), drop=drop,
                               deferred=tuple(deferred))
@@ -822,6 +854,7 @@ class Router:
         rebalanced = (tuple(self.rebalance_parked(engine))
                       if rebalance else ())
         self.engine_joins += 1
+        self._sanitize_check()
         return EngineJoinReport(node=node, adopted=tuple(adopted),
                                 rebalanced=rebalanced, join=join)
 

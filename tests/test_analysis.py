@@ -1,0 +1,288 @@
+"""Workflow/config linter (PR 9 tentpole, part a).
+
+Every rule gets a trigger fixture (a workflow/config that MUST fire it) and a
+clean fixture (one that must NOT) — so a rule can neither rot into a no-op
+nor start crying wolf without a test moving.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.analysis.lint import (RULES, Severity, apply_allowlist,
+                                 default_allowlist_path, gate, lint,
+                                 lint_graph, load_allowlist,
+                                 safe_write_modes)
+from repro.core import (HPC_CLUSTER, SimConfig, StorageHierarchy, TierSpec,
+                        compile_workflow)
+from repro.core.dag import TaskGraph
+from repro.core.hints import size_hint
+from repro.core.workloads import fig2_workflow, pipeline_chain_workflow
+
+GB = float(1 << 30)
+
+
+def rule_ids(findings, rule=None):
+    hits = [f for f in findings if rule is None or f.rule == rule]
+    return [(f.rule, f.target) for f in hits]
+
+
+def fired(findings, rule):
+    return [f for f in findings if f.rule == rule]
+
+
+def chain2() -> TaskGraph:
+    """Minimal clean workflow: ext -> t1 -> mid -> t2 -> out(sink)."""
+    g = TaskGraph()
+    g.add_data("ext", size_bytes=size_hint(GB))
+    g.add_task("t1", inputs=("ext",), outputs=("mid",))
+    g.add_task("t2", inputs=("mid",), outputs=("out",))
+    g.mark_sink("out")
+    return g
+
+
+class TestStructuralRules:
+    def test_empty_graph_is_clean(self):
+        assert lint_graph(TaskGraph()) == []
+
+    def test_clean_chain_has_no_findings(self):
+        assert lint_graph(chain2()) == []
+
+    def test_self_referential_task(self):
+        g = TaskGraph()
+        g.add_task("loop", inputs=("x",), outputs=("x",))
+        hits = fired(lint_graph(g), "waw-race")
+        assert any(f.target == "loop" and "own output" in f.message
+                   for f in hits)
+        assert all(f.severity == Severity.ERROR for f in hits)
+
+    def test_cycle_names_stuck_tasks(self):
+        g = TaskGraph()
+        g.add_task("t1", inputs=("a",), outputs=("b",))
+        g.add_task("t2", inputs=("b",), outputs=("a",))
+        hits = fired(lint_graph(g), "waw-race")
+        assert any("cycle" in f.message and "t1" in f.message for f in hits)
+
+    def test_duplicate_producer_rejected_then_linted(self):
+        g = chain2()
+        # the graph API refuses a second producer outright...
+        with pytest.raises(ValueError, match="already produced"):
+            g.add_task("evil", inputs=(), outputs=("mid",))
+        # ...so the race only arises via hand-mutation — which lint catches
+        g.data["mid"].producer = "someone_else"
+        hits = fired(lint_graph(g), "waw-race")
+        assert any("WAW race" in f.message and f.target == "mid"
+                   for f in hits)
+
+    def test_consumer_edge_mismatch_both_directions(self):
+        g = chain2()
+        g.data["mid"].consumers.append("ghost")       # consumer not a reader
+        hits = fired(lint_graph(g), "waw-race")
+        assert any("ghost" in f.message for f in hits)
+        g2 = chain2()
+        g2.data["mid"].consumers.clear()              # reader not a consumer
+        hits2 = fired(lint_graph(g2), "waw-race")
+        assert any("absent from its consumer list" in f.message
+                   for f in hits2)
+
+    def test_missing_producer_trigger_and_clean(self):
+        g = TaskGraph()
+        g.add_task("t", inputs=("orphan",), outputs=("o",))
+        g.mark_sink("o")
+        assert fired(lint_graph(g), "missing-producer")
+        assert not fired(lint_graph(chain2()), "missing-producer")
+
+    def test_dead_dataset_trigger_and_sink_mark_clears(self):
+        g = TaskGraph()
+        g.add_data("ext", size_bytes=size_hint(GB))
+        g.add_task("t", inputs=("ext",), outputs=("dead",))
+        assert fired(lint_graph(g), "dead-dataset")
+        g.mark_sink("dead")
+        assert not fired(lint_graph(g), "dead-dataset")
+
+    def test_mark_sink_unknown_dataset_raises(self):
+        with pytest.raises(KeyError):
+            TaskGraph().mark_sink("nope")
+
+
+class TestCapacityAndDurability:
+    def tiny_hier(self, cap):
+        return StorageHierarchy([TierSpec("host", cap, 100e9)],
+                                remote=TierSpec("remote", float("inf"), 1e9))
+
+    def test_capacity_infeasible_trigger(self):
+        wf = compile_workflow(pipeline_chain_workflow(2, 3), HPC_CLUSTER)
+        cfg = SimConfig(n_nodes=2, hw=HPC_CLUSTER,
+                        hierarchy=self.tiny_hier(1e6))
+        hits = fired(lint(wf, config=cfg), "capacity-infeasible")
+        assert any("working set" in f.message for f in hits)
+        assert any(f.target == "cluster" for f in hits)
+
+    def test_capacity_clean_when_generous_or_unbounded(self):
+        wf = compile_workflow(pipeline_chain_workflow(2, 3), HPC_CLUSTER)
+        roomy = SimConfig(n_nodes=2, hw=HPC_CLUSTER,
+                          hierarchy=self.tiny_hier(1e15))
+        assert not fired(lint(wf, config=roomy), "capacity-infeasible")
+        # an infinite tier means "infeasible" is unprovable: stay silent
+        nohier = SimConfig(n_nodes=2, hw=HPC_CLUSTER)
+        assert not fired(lint(wf, config=nohier), "capacity-infeasible")
+
+    def test_durability_hazard_trigger_and_clean(self):
+        wf = compile_workflow(pipeline_chain_workflow(2, 3), HPC_CLUSTER)
+        risky = SimConfig(n_nodes=4, hw=HPC_CLUSTER,
+                          failures=((5.0, 1),), durability="none")
+        hits = fired(lint(wf, config=risky), "durability-hazard")
+        assert len(hits) == 1 and hits[0].target == "config"
+        safe = SimConfig(n_nodes=4, hw=HPC_CLUSTER, failures=((5.0, 1),),
+                         durability="fsync_on_barrier")
+        assert not fired(lint(wf, config=safe), "durability-hazard")
+        nofail = SimConfig(n_nodes=4, hw=HPC_CLUSTER, durability="none")
+        assert not fired(lint(wf, config=nofail), "durability-hazard")
+
+
+class TestWriteAroundRule:
+    def test_compiler_pins_are_provably_safe(self):
+        wf = compile_workflow(fig2_workflow(), HPC_CLUSTER)
+        assert not fired(lint(wf), "unsafe-write-around")
+        assert safe_write_modes(wf) == wf.write_modes
+
+    def test_hand_pinned_multi_consumer_fires(self):
+        g = TaskGraph()
+        g.add_data("ext", size_bytes=size_hint(GB))
+        g.add_task("p", inputs=("ext",), outputs=("shared",))
+        g.data["shared"].xattr["write_mode"] = "around"
+        g.add_task("c1", inputs=("shared",), outputs=("o1",))
+        g.add_task("c2", inputs=("shared",), outputs=("o2",))
+        g.mark_sink("o1", "o2")
+        hits = fired(lint_graph(g), "unsafe-write-around")
+        assert any("2 consumers" in f.message for f in hits)
+
+    def test_stale_write_modes_dict_cannot_smuggle_a_pin(self):
+        wf = compile_workflow(fig2_workflow(), HPC_CLUSTER)
+        wf.write_modes["ra"] = "around"   # ra feeds merge at a 50/50 split
+        assert fired(lint(wf), "unsafe-write-around")
+        assert "ra" not in safe_write_modes(wf)
+
+
+class TestClusterConfigRules:
+    def test_zero_ici_bandwidth(self):
+        hw = dataclasses.replace(HPC_CLUSTER, ici_gbps=0.0)
+        cfg = SimConfig(n_nodes=4, hw=hw)
+        hits = fired(lint_graph(chain2(), config=cfg), "unreachable-node")
+        assert any(f.target == "hw.ici_gbps" for f in hits)
+        clean = SimConfig(n_nodes=4, hw=HPC_CLUSTER)
+        assert not fired(lint_graph(chain2(), config=clean),
+                         "unreachable-node")
+
+    def test_zero_remote_bandwidth_with_remote_externals(self):
+        hw = dataclasses.replace(HPC_CLUSTER, remote_tier_gbps=0.0)
+        cfg = SimConfig(n_nodes=4, hw=hw)
+        hits = fired(lint_graph(chain2(), config=cfg), "unreachable-node")
+        assert any(f.target == "hw.remote_tier_gbps" for f in hits)
+
+    def test_bad_speed_overrides(self):
+        cfg = SimConfig(n_nodes=2, hw=HPC_CLUSTER,
+                        speeds={5: 1.0, 1: 0.0})
+        hits = fired(lint_graph(chain2(), config=cfg), "unreachable-node")
+        targets = {f.target for f in hits}
+        assert {"node5", "node1"} <= targets
+        assert all(f.severity == Severity.WARNING for f in hits)
+
+    def test_zero_capacity_tier_trigger_and_clean(self):
+        bad = StorageHierarchy([TierSpec("hbm", 0.0, 800e9),
+                                TierSpec("host", 8 * GB, 0.0)],
+                               remote=TierSpec("remote", float("inf"), 1e9))
+        cfg = SimConfig(n_nodes=2, hw=HPC_CLUSTER, hierarchy=bad)
+        hits = fired(lint_graph(chain2(), config=cfg), "zero-capacity-tier")
+        assert {f.target for f in hits} == {"hbm", "host"}
+        good = StorageHierarchy([TierSpec("host", 8 * GB, 100e9)],
+                                remote=TierSpec("remote", float("inf"), 1e9))
+        assert not fired(lint_graph(chain2(), config=SimConfig(
+            n_nodes=2, hw=HPC_CLUSTER, hierarchy=good)), "zero-capacity-tier")
+
+    def test_gapped_join_schedule(self):
+        cfg = SimConfig(n_nodes=4, hw=HPC_CLUSTER, joins=((5.0, 9),))
+        hits = fired(lint_graph(chain2(), config=cfg), "gapped-membership")
+        assert any("skips ids 4..8" in f.message for f in hits)
+        dense = SimConfig(n_nodes=4, hw=HPC_CLUSTER, joins=((5.0, 4),))
+        assert not fired(lint_graph(chain2(), config=dense),
+                         "gapped-membership")
+
+    def test_failure_of_never_admitted_node(self):
+        cfg = SimConfig(n_nodes=4, hw=HPC_CLUSTER, failures=((5.0, 20),))
+        hits = fired(lint_graph(chain2(), config=cfg), "gapped-membership")
+        assert hits and hits[0].severity == Severity.ERROR
+        # a join admitting the node before the failure makes it legitimate
+        ok = SimConfig(n_nodes=4, hw=HPC_CLUSTER, joins=((2.0, 20),),
+                       failures=((5.0, 20),))
+        late = fired(lint_graph(chain2(), config=ok), "gapped-membership")
+        assert not [f for f in late if f.severity == Severity.ERROR]
+
+
+class TestAllowlistAndGate:
+    def test_reason_is_mandatory(self, tmp_path):
+        p = tmp_path / "allow.json"
+        p.write_text('[{"rule": "dead-dataset", "target": "*", "reason": ""}]')
+        with pytest.raises(ValueError, match="no reason"):
+            load_allowlist(str(p))
+
+    def test_missing_file_is_empty(self, tmp_path):
+        assert load_allowlist(str(tmp_path / "absent.json")) == []
+
+    def test_suppression_carries_reason_and_gate_skips_it(self):
+        g = TaskGraph()
+        g.add_data("ext", size_bytes=size_hint(GB))
+        g.add_task("t", inputs=("ext",), outputs=("dead",))
+        findings = lint_graph(g, name="wf", allowlist=[
+            {"rule": "dead-dataset", "target": "wf:de*",
+             "reason": "intentional scratch output"}])
+        [f] = fired(findings, "dead-dataset")
+        assert f.suppressed and f.reason == "intentional scratch output"
+        assert gate(findings) == []
+        # an unsuppressed finding of the same severity still gates
+        plain = apply_allowlist(lint_graph(g, name="wf"), [])
+        assert gate(plain)
+
+    def test_gate_threshold_orders_severities(self):
+        g = TaskGraph()
+        g.add_task("loop", inputs=("x",), outputs=("x",))   # ERROR
+        findings = lint_graph(g)
+        assert gate(findings, Severity.ERROR)
+        assert not gate([], Severity.INFO)
+
+    def test_repo_allowlist_loads_and_builtins_gate_clean(self):
+        # the committed allow-list parses, and every built-in workload lints
+        # clean (or reasoned-suppressed) — the same contract CI enforces
+        from repro.analysis.__main__ import main
+        assert main([]) == 0
+
+    def test_severity_str(self):
+        assert str(Severity.WARNING) == "WARNING"
+
+    def test_rules_registry_is_complete(self):
+        assert set(RULES) == {
+            "waw-race", "missing-producer", "dead-dataset",
+            "capacity-infeasible", "durability-hazard",
+            "unsafe-write-around", "unreachable-node",
+            "zero-capacity-tier", "gapped-membership"}
+        assert default_allowlist_path().endswith("analysis_allowlist.json")
+
+
+class TestStrictValidate:
+    def test_strict_rejects_sizeless_consumed_external(self):
+        g = TaskGraph()
+        g.add_task("t", inputs=("orphan",), outputs=("o",))
+        g.validate()                                   # default: tolerated
+        with pytest.raises(ValueError, match="orphan"):
+            g.validate(strict=True)
+
+    def test_compile_workflow_strict_plumbs_through(self):
+        g = TaskGraph()
+        g.add_task("t", inputs=("orphan",), outputs=("o",))
+        g.mark_sink("o")
+        compile_workflow(g, HPC_CLUSTER)               # default still works
+        with pytest.raises(ValueError, match="strict validation"):
+            compile_workflow(g, HPC_CLUSTER, strict=True)
+
+    def test_strict_accepts_sized_externals(self):
+        chain2().validate(strict=True)

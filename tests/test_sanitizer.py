@@ -1,0 +1,231 @@
+"""Runtime invariant sanitizer (PR 9 tentpole, part b).
+
+Three layers of proof: sanitized runs are clean AND bit-identical to
+unsanitized runs (the sanitizer is a pure observer); each check catches a
+deliberately injected desync, naming the first divergent entry; and the
+simulator's checkpoint loop surfaces a mid-run drift as a structured
+:class:`SanitizerError` instead of a silently wrong schedule.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.analysis import sanitize
+from repro.analysis.sanitize import SanitizerError, env_enabled
+from repro.core import (HPC_CLUSTER, LocalityScheduler, ProactiveScheduler,
+                        SimConfig, StorageHierarchy, TierSpec,
+                        WorkflowSimulator, compile_workflow)
+from repro.core.workloads import mapreduce_workflow, pipeline_chain_workflow
+
+TIGHT = StorageHierarchy(
+    [TierSpec("hbm", 6e9, 800e9), TierSpec("bb", 12e9, 10e9)],
+    remote=TierSpec("remote", float("inf"), 0.5e9))
+
+
+def cfg(**kw) -> SimConfig:
+    base = dict(n_nodes=4, hw=HPC_CLUSTER, hierarchy=TIGHT,
+                write_policy="back", coordinated_eviction=True)
+    base.update(kw)
+    return SimConfig.from_kwargs(**base)
+
+
+def run_sim(config, sched_cls=ProactiveScheduler, wf=None):
+    wf = wf or compile_workflow(mapreduce_workflow(8, 4), HPC_CLUSTER)
+    sim = WorkflowSimulator(wf, sched_cls(wf), config=config)
+    return sim, sim.run()
+
+
+class TestObserverOnly:
+    def test_sanitized_run_is_clean_and_identical(self):
+        _, r_off = run_sim(cfg(sanitize=False))
+        _, r_on = run_sim(cfg(sanitize=True, sanitize_every=1))
+        assert r_on == r_off
+
+    def test_sanitized_failure_run_is_clean(self):
+        c = cfg(sanitize=True, sanitize_every=1, failures=((4.0, 1),),
+                durability="fsync_on_barrier")
+        _, r = run_sim(c)
+        assert r.tasks_done > 0
+
+    def test_env_var_opt_in(self, monkeypatch):
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        assert env_enabled()
+        sim, _ = run_sim(cfg())          # sanitize=None -> env
+        assert sim.sanitize
+        for off in ("", "0", "false", "off", "no"):
+            monkeypatch.setenv("REPRO_SANITIZE", off)
+            assert not env_enabled()
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        sim2, _ = run_sim(cfg(sanitize=False))   # explicit beats env
+        assert not sim2.sanitize
+
+    def test_error_is_structured(self):
+        err = SanitizerError("ledger", "bytes_moved", 1.0, 2.0)
+        assert err.check == "ledger" and err.key == "bytes_moved"
+        assert err.expected == 1.0 and err.actual == 2.0
+        assert "divergent entry 'bytes_moved'" in str(err)
+        assert isinstance(err, AssertionError)
+
+
+class TestInjectedDesyncs:
+    """Each incremental structure, corrupted after a real run, is caught by
+    its check — and the error names the entry that drifted."""
+
+    @pytest.fixture(scope="class")
+    def ran(self):
+        sim, _ = run_sim(cfg())
+        return sim
+
+    def test_membership_desync(self, ran):
+        store = ran.store
+        store._failed_nodes.add(2)      # node never actually failed
+        try:
+            with pytest.raises(SanitizerError) as ei:
+                sanitize.check_membership(store, ran.cluster)
+        finally:
+            store._failed_nodes.discard(2)
+        assert ei.value.check == "membership"
+
+    def test_tier_usage_desync(self, ran):
+        store = ran.store
+        key = next(iter(store._usage), (0, "hbm"))
+        store._usage[key] = store._usage.get(key, 0.0) + 123456.0
+        try:
+            with pytest.raises(SanitizerError) as ei:
+                sanitize.check_tier_usage(store)
+        finally:
+            store._usage[key] -= 123456.0
+        assert ei.value.check == "tier-usage" and ei.value.key == key
+
+    def test_ledger_desync(self, ran):
+        store = ran.store
+        store.bytes_moved += 1e9
+        try:
+            with pytest.raises(SanitizerError) as ei:
+                sanitize.check_ledger(store)
+        finally:
+            store.bytes_moved -= 1e9
+        assert ei.value.check == "ledger" and ei.value.key == "bytes_moved"
+
+    def test_pin_leak_desync(self, ran):
+        store = ran.store
+        name = next(iter(store._sizes))
+        store._pins[(name, 0)] = store._pins.get((name, 0), 0) + 1
+        try:
+            with pytest.raises(SanitizerError) as ei:
+                sanitize.check_pin_conservation(store, {})
+        finally:
+            store._pins[(name, 0)] -= 1
+        assert ei.value.check == "pin-conservation"
+        assert ei.value.key == (name, 0)
+
+    def test_placement_mirror_desync(self, ran):
+        sched, store = ran.sched, ran.store
+        sanitize.check_placement_mirror(sched, store)    # clean before
+        name = next(iter(sched._placements))
+        stash = sched._placements.pop(name)
+        try:
+            with pytest.raises(SanitizerError) as ei:
+                sanitize.check_placement_mirror(sched, store)
+        finally:
+            sched._placements[name] = stash
+        assert ei.value.check == "placement-mirror"
+        assert ei.value.key == name
+
+    def test_term_cache_desync(self, ran):
+        sched = ran.sched
+        name = next((n for n in sched._term_cache if sched._term_cache[n]),
+                    None)
+        if name is None:
+            pytest.skip("run left no cached terms")
+        node = next(iter(sched._term_cache[name]))
+        sched._term_cache[name][node] += 1.0
+        try:
+            with pytest.raises(SanitizerError) as ei:
+                sanitize.check_term_cache(sched, ran.cluster)
+        finally:
+            sched._term_cache[name][node] -= 1.0
+        assert ei.value.check == "term-cache"
+        assert ei.value.key == (name, node)
+
+    def test_proactive_avail_desync(self, ran):
+        sched = ran.sched
+        tid = next(iter(sched.wf.graph.tasks))
+        old = sched._avail.get(tid, 0)
+        sched._avail[tid] = old + 7
+        try:
+            with pytest.raises(SanitizerError) as ei:
+                sanitize.check_proactive(sched, ran.cluster)
+        finally:
+            sched._avail[tid] = old
+        assert ei.value.check == "proactive"
+        assert ei.value.key == f"_avail[{tid}]"
+
+
+class TestServingSanitizer:
+    def test_engine_slot_desync_caught(self):
+        import jax
+
+        from repro.configs import get_smoke
+        from repro.core.config import ServingConfig
+        from repro.models import init_params
+        from repro.serve.engine import ServingEngine
+
+        mcfg = dataclasses.replace(get_smoke("granite-3-2b"),
+                                   dtype="float32")
+        params = init_params(mcfg, jax.random.PRNGKey(0))
+        eng = ServingEngine(mcfg, params,
+                            config=ServingConfig(max_batch=2, max_seq=64,
+                                                 sanitize=True))
+        sid = eng.submit([1, 2, 3])      # sanitized transitions: clean
+        eng.submit([4, 5])               # keeps the next step() non-empty
+        eng.step()
+        eng._slotted.pop(sid)            # slot table drifts from sessions
+        with pytest.raises(SanitizerError) as ei:
+            eng.step()
+        assert ei.value.check == "engine-slots"
+        assert ei.value.key == f"session{sid}"
+
+
+class TestMidRunDrift:
+    def test_checkpoint_loop_catches_live_drift(self):
+        """A scheduler that corrupts its own mirror mid-run: the per-event
+        checkpoint must stop the simulation with the divergent dataset."""
+
+        class DriftingScheduler(LocalityScheduler):
+            def select(self, ready, cluster):
+                out = super().select(ready, cluster)
+                if self._placements and not getattr(self, "_hit", False):
+                    self._hit = True
+                    self._dropped = next(iter(self._placements))
+                    del self._placements[self._dropped]
+                return out
+
+        wf = compile_workflow(pipeline_chain_workflow(2, 3), HPC_CLUSTER)
+        sched = DriftingScheduler(wf)
+        sim = WorkflowSimulator(wf, sched,
+                                config=cfg(sanitize=True, sanitize_every=1))
+        with pytest.raises(SanitizerError) as ei:
+            sim.run()
+        assert ei.value.check == "placement-mirror"
+        assert ei.value.key == sched._dropped
+
+    def test_unsanitized_run_tolerates_the_same_drift(self):
+        """Control: without the sanitizer the drifting run completes —
+        i.e. the drift above is exactly the silent-corruption class the
+        sanitizer exists to catch."""
+
+        class DriftingScheduler(LocalityScheduler):
+            def select(self, ready, cluster):
+                out = super().select(ready, cluster)
+                if self._placements and not getattr(self, "_hit", False):
+                    self._hit = True
+                    del self._placements[next(iter(self._placements))]
+                return out
+
+        wf = compile_workflow(pipeline_chain_workflow(2, 3), HPC_CLUSTER)
+        sim = WorkflowSimulator(wf, DriftingScheduler(wf),
+                                config=cfg(sanitize=False))
+        r = sim.run()
+        assert r.tasks_done == len(wf.graph.tasks)

@@ -4,12 +4,25 @@ The compiler knows consumer counts: a produced dataset with exactly one
 consumer whose locality-bound node is the producing node is pinned
 ``mode="around"`` (run-once streaming output — no other node ever reads it),
 and the simulator can honor the pins (``honor_write_modes=True``).
+
+PR 9 flips the default to ``"auto"``: pins the analyzer re-proves safe
+(``repro.analysis.lint.safe_write_modes``) are honored by default — but only
+in configurations where write-around can pay off (a finite node tier, a
+locality-aware scheduler, stable membership).
 """
 
-from repro.core import HPC_CLUSTER, LocalityScheduler, compile_workflow
+import pytest
+
+from repro.core import (FCFSScheduler, HPC_CLUSTER, LocalityScheduler,
+                        SimConfig, StorageHierarchy, TierSpec,
+                        compile_workflow)
 from repro.core.simulator import WorkflowSimulator
 from repro.core.workloads import (fig2_workflow, montage_workflow,
                                   serving_session_workflow)
+
+FINITE = StorageHierarchy(
+    [TierSpec("hbm", 6e9, 800e9), TierSpec("bb", 12e9, 10e9)],
+    remote=TierSpec("remote", float("inf"), 0.5e9))
 
 
 class TestEmittedPins:
@@ -46,7 +59,9 @@ class TestEmittedPins:
 
 
 class TestSimulatorHonorsPins:
-    def test_default_ignores_pins(self):
+    def test_default_ignores_pins_without_capacity_pressure(self):
+        # honor_write_modes="auto": with no finite node tier, write-around
+        # has nothing to save, so the pins stay inert (the PR-4 default)
         wf = compile_workflow(fig2_workflow(), HPC_CLUSTER)
         sim = WorkflowSimulator(wf, LocalityScheduler(wf), n_nodes=4,
                                 hw=HPC_CLUSTER)
@@ -65,3 +80,53 @@ class TestSimulatorHonorsPins:
             sim.store.stat("part_a").real_loc) == "remote"
         # unpinned datasets keep the store default
         assert sim.store.write_mode("ra") == "through"
+
+
+class TestAutoGate:
+    """honor_write_modes="auto" (the PR 9 default): analyzer-proven pins are
+    honored exactly when the config can profit from them."""
+
+    def run_fig2(self, **kw):
+        wf = compile_workflow(fig2_workflow(), HPC_CLUSTER)
+        sched_cls = kw.pop("sched_cls", LocalityScheduler)
+        cfg = SimConfig.from_kwargs(n_nodes=4, hw=HPC_CLUSTER, **kw)
+        sim = WorkflowSimulator(wf, sched_cls(wf), config=cfg)
+        r = sim.run()
+        assert r.tasks_done == len(wf.graph.tasks)
+        return sim
+
+    def test_auto_honors_under_finite_tiers_and_locality(self):
+        sim = self.run_fig2(hierarchy=FINITE)
+        assert sim.store.write_mode("part_a") == "around"
+        assert any(t.kind == "writearound" for t in sim.store.transfers)
+        # unsafe/unpinned datasets stay on the default path
+        assert sim.store.write_mode("ra") == "through"
+
+    def test_auto_off_with_failures(self):
+        # rerun recovery refetches inputs: a PFS-only sole copy turns every
+        # recovery read into a remote fetch, so membership churn disables auto
+        sim = self.run_fig2(hierarchy=FINITE, failures=[(5.0, 1)])
+        assert sim.store.write_mode("part_a") == "through"
+        assert sim._write_modes == {}
+
+    def test_auto_off_for_non_locality_scheduler(self):
+        # FCFS does not bind consumers to data: co-scheduling is unprovable
+        sim = self.run_fig2(hierarchy=FINITE, sched_cls=FCFSScheduler)
+        assert sim.store.write_mode("part_a") == "through"
+
+    def test_explicit_false_beats_auto(self):
+        sim = self.run_fig2(hierarchy=FINITE, honor_write_modes=False)
+        assert sim.store.write_mode("part_a") == "through"
+        assert not any(t.kind == "writearound" for t in sim.store.transfers)
+
+    def test_explicit_true_is_legacy_unguarded(self):
+        # True keeps the PR-4 semantics: every compiler pin, no runtime guard
+        sim = self.run_fig2(honor_write_modes=True)
+        assert sim.store.write_mode("part_a") == "around"
+
+    def test_invalid_value_rejected(self):
+        wf = compile_workflow(fig2_workflow(), HPC_CLUSTER)
+        with pytest.raises(ValueError, match="honor_write_modes"):
+            WorkflowSimulator(wf, LocalityScheduler(wf),
+                              config=SimConfig(n_nodes=4, hw=HPC_CLUSTER,
+                                               honor_write_modes="yes"))
