@@ -24,6 +24,13 @@ In-bench assertions (the ISSUE 5 acceptance criteria):
     sourced on a dead node never launders lost bytes into durability);
   * cross-engine failover saves >= 1 prefill per parked-session failure and
     the post-failover decode is bit-identical to an unfailed control.
+
+A third sweep (ISSUE 10 satellite) compares the **predictive re-replication
+trigger** against purely reactive recovery: a health monitor flags each
+failing node ``predict_lead_s`` early and the store drains its sole copies
+to another failure domain before the crash. The in-bench assert: the
+predictive run loses strictly less (``dirty_lost + reruns``) than the
+reactive run of the same schedule.
 """
 
 from __future__ import annotations
@@ -34,7 +41,8 @@ import jax
 
 from repro.configs import get_smoke
 from repro.core import HPC_CLUSTER, ProactiveScheduler, compile_workflow
-from repro.core.locstore import GiB, LocStore, tiered_hierarchy
+from repro.core.locstore import (GiB, LocStore, StorageHierarchy, TierSpec,
+                                 tiered_hierarchy)
 from repro.core.simulator import WorkflowSimulator
 from repro.core.workloads import pipeline_chain_workflow
 from repro.models import init_params
@@ -87,6 +95,41 @@ def run(report, quick: bool = False) -> None:
         else:
             # zero failures: the policies' only effect is the fsync cost
             assert none.fsyncs == 0 and barrier.fsyncs > 0
+
+    # ---------------------------- (a2) predictive vs reactive recovery
+    wf_p = compile_workflow(pipeline_chain_workflow(8, 6), HPC_CLUSTER)
+    hier = StorageHierarchy(
+        [TierSpec("hbm", 6e9, 800e9), TierSpec("bb", 12e9, 10e9)],
+        remote=TierSpec("remote", float("inf"), 0.5e9))
+    results_p = {}
+    for mode, predict in (("predictive", True), ("reactive", False)):
+        sim = WorkflowSimulator(wf_p, ProactiveScheduler(wf_p,
+                                                         risk_aware=True),
+                                n_nodes=4, hw=HPC_CLUSTER, hierarchy=hier,
+                                failures=[(8.0, 1)], predict_failures=predict,
+                                predict_lead_s=3.0)
+        r = sim.run()
+        results_p[mode] = r
+        assert r.tasks_done == len(wf_p.graph.tasks)
+        report(f"failures/predictive/{mode}", 0.0,
+               f"reruns={r.reruns} dirty_lost={r.dirty_lost} "
+               f"predictive_rereps={r.predictive_rereplications} "
+               f"predictive_gib="
+               f"{r.bytes_predictively_rereplicated / GiB:.2f} "
+               f"makespan_s={r.makespan:.1f}")
+    pred, react = results_p["predictive"], results_p["reactive"]
+    assert pred.predictive_rereplications > 0, \
+        "the flagged failure must trigger at least one predictive copy"
+    assert (pred.dirty_lost + pred.reruns
+            < react.dirty_lost + react.reruns), (
+        f"predictive did not beat reactive: "
+        f"{pred.dirty_lost}+{pred.reruns} !< "
+        f"{react.dirty_lost}+{react.reruns}")
+    loss_saved = (react.dirty_lost + react.reruns
+                  - pred.dirty_lost - pred.reruns)
+    report("failures/predictive/saved", 0.0,
+           f"loss_saved={loss_saved} "
+           f"makespan_saved_s={react.makespan - pred.makespan:.1f}")
 
     # --------------------------------------------- (b) serving failover
     cfg = dataclasses.replace(get_smoke("granite-3-2b"), dtype="float32")

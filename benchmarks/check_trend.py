@@ -14,8 +14,9 @@ Usage (the CI --quick job runs it right after ``run.py --quick``)::
   Keys mentioning ``remote``, ``io_wait``, ``reruns`` (failure-induced task
   re-executions), ``dirty_lost``, ``phantom``, ``p99_ttft``,
   ``p99_resume`` (the serving-trace tail-latency SLOs, PR 7), ``recovery``
-  or ``goodput_dip`` (the elastic-membership recovery SLOs, PR 8) are
-  **higher-is-worse**:
+  or ``goodput_dip`` (the elastic-membership recovery SLOs, PR 8),
+  ``cross_spine`` or ``topo_makespan`` (the topology-aware placement wins,
+  PR 10) are **higher-is-worse**:
   the gate fails when current > threshold x baseline. Keys mentioning
   ``saved`` (``reruns_saved``, ``prefills_saved`` — the durability/failover
   wins) are **lower-is-worse**: the gate fails when current < baseline /
@@ -53,7 +54,8 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 WATCHED = ("remote", "io_wait", "reruns", "dirty_lost", "phantom",
-           "p99_ttft", "p99_resume", "recovery", "goodput_dip")
+           "p99_ttft", "p99_resume", "recovery", "goodput_dip",
+           "cross_spine", "topo_makespan")
 # wins that must not shrink: checked in the opposite direction. Matched
 # FIRST — "reruns_saved" is a saving, not a rerun count.
 WATCHED_DOWN = ("saved",)

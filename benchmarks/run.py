@@ -16,6 +16,8 @@ results/benchmarks.json).
       (p50/p95/p99 TTFT + resume), flat pinning vs tiers vs predictive warm
   E11 bench_membership — elastic membership: fail-then-join recovery time,
       goodput dip, autoscale-under-load, workflow re-replication cycle
+  E12 bench_topology — topology-aware vs blind placement on oversubscribed
+      and mixed-generation fabrics (cross-spine bytes + makespan)
 
 ``--quick`` runs every module at smoke scale (small shapes, few reps) — the
 CI benchmark job uses it to keep the perf trajectory alive on every push
@@ -58,12 +60,12 @@ def main() -> int:
     from benchmarks import (bench_ablation, bench_failures, bench_locstore,
                             bench_membership, bench_prefetch, bench_roofline,
                             bench_scheduler, bench_serving,
-                            bench_serving_trace, bench_tiers,
+                            bench_serving_trace, bench_tiers, bench_topology,
                             bench_writeback)
     modules = [bench_scheduler, bench_prefetch, bench_ablation,
                bench_locstore, bench_serving, bench_roofline, bench_tiers,
                bench_writeback, bench_failures, bench_serving_trace,
-               bench_membership]
+               bench_membership, bench_topology]
 
     rows: list[dict] = []
 

@@ -89,6 +89,8 @@ class LintContext:
     wf: CompiledWorkflow | None
     config: SimConfig | None
     name: str
+    # per-run rule knobs (e.g. "oversub-factor"); rules read with .get()
+    params: dict = dataclasses.field(default_factory=dict)
     _rule: "Rule | None" = None
 
     def finding(self, target: str, message: str,
@@ -422,6 +424,86 @@ def _unreachable_node(ctx: LintContext) -> Iterator[Finding]:
                               f"node {node} has speed {speed:g} — any task "
                               f"placed there effectively never finishes",
                               severity=Severity.WARNING)
+    # link-graph reachability: with an explicit topology a node is
+    # unreachable when its NIC, its rack's uplink, or the PFS attachment it
+    # depends on has zero bandwidth (link_gbps divides by these at runtime)
+    topo = getattr(config, "topology", None)
+    if topo is None:
+        return
+    if topo.n_nodes != n:
+        yield ctx.finding("topology.n_nodes",
+                          f"topology describes {topo.n_nodes} node(s) but "
+                          f"the config runs {n} — the simulator refuses the "
+                          f"mismatch")
+    remote_externals = has_external and config.external_loc == "remote"
+    for node in range(min(topo.n_nodes, n)):
+        if topo.nic(node) <= 0:
+            yield ctx.finding(f"node{node}",
+                              f"node {node}'s NIC bandwidth is 0 — no path "
+                              f"to any peer or to the PFS")
+    for r in range(topo.n_racks):
+        if topo.up(r) <= 0 and (topo.n_racks > 1 or remote_externals):
+            yield ctx.finding(f"rack{r}",
+                              f"rack {r}'s ToR uplink bandwidth is 0 — its "
+                              f"nodes cannot reach other racks or the PFS")
+    if topo.pfs_gbps <= 0 and remote_externals:
+        yield ctx.finding("topology.pfs_gbps",
+                          "PFS attachment bandwidth is 0 but external "
+                          "inputs start on the remote tier — they can "
+                          "never be staged in")
+
+
+@_rule("oversubscribed-link", Severity.WARNING,
+       "compiled transfer demand exceeding a shared link's capacity budget")
+def _oversubscribed_link(ctx: LintContext) -> Iterator[Finding]:
+    """Budget the compiled external stage-in plan against the shared links.
+
+    Over the schedule's critical-path window, every byte staged in from the
+    remote tier crosses the PFS attachment once and a ToR uplink once; when
+    that demand exceeds ``capacity * critical_seconds * factor`` the link is
+    the bottleneck no matter how the scheduler places tasks. ``factor``
+    (default 1.0) comes from ``lint(..., params={"oversub-factor": ...})`` —
+    raise it to only flag gross oversubscription."""
+    wf, config = ctx.wf, ctx.config
+    if wf is None or config is None:
+        return
+    topo = getattr(config, "topology", None)
+    if topo is None or topo.flat:
+        return
+    crit = max((wf.earliest_start[t] + wf.est_seconds[t] for t in wf.topo),
+               default=0.0)
+    if crit <= 0.0:
+        return
+    ext_bytes = sum(wf.sizes.get(d.name, 0.0)
+                    for d in ctx.graph.data.values() if d.is_external)
+    if ext_bytes <= 0.0:
+        return
+    factor = float(ctx.params.get("oversub-factor", 1.0))
+    gib = float(1 << 30)
+    if config.external_loc == "remote" and topo.pfs_gbps > 0:
+        budget = topo.pfs_gbps * crit * factor
+        if ext_bytes > budget:
+            yield ctx.finding(
+                "pfs",
+                f"remote stage-in plan moves {ext_bytes / gib:.2f} GiB "
+                f"through the PFS link but its budget over the "
+                f"{crit:.1f}s critical path is {budget / gib:.2f} GiB "
+                f"(factor {factor:g}) — stage-in serializes behind the "
+                f"PFS attachment")
+    per_rack = ext_bytes / max(topo.n_racks, 1)
+    for r in range(topo.n_racks):
+        cap = topo.up_capacity_gbps[r]
+        if cap <= 0 or cap == float("inf"):
+            continue
+        budget = cap * crit * factor
+        if per_rack > budget:
+            yield ctx.finding(
+                f"rack{r}",
+                f"stage-in plan pushes ~{per_rack / gib:.2f} GiB through "
+                f"rack {r}'s uplink but its budget over the {crit:.1f}s "
+                f"critical path is {budget / gib:.2f} GiB (capacity "
+                f"{cap / 1e9:.2f} GB/s, factor {factor:g}) — the "
+                f"oversubscribed uplink is the bottleneck")
 
 
 @_rule("zero-capacity-tier", Severity.ERROR,
@@ -476,18 +558,22 @@ def _gapped_membership(ctx: LintContext) -> Iterator[Finding]:
 def lint(wf: CompiledWorkflow | TaskGraph, *,
          config: SimConfig | None = None, name: str = "workflow",
          rules: Iterable[str] | None = None,
-         allowlist: "list[dict] | None" = None) -> list[Finding]:
+         allowlist: "list[dict] | None" = None,
+         params: dict | None = None) -> list[Finding]:
     """Run every registered rule (or the ``rules`` subset) over a workflow.
 
     ``wf`` may be a bare :class:`TaskGraph` (structural rules only) or a
     :class:`CompiledWorkflow` (adds the size/placement/cost rules).
     ``config`` unlocks the cluster/capacity/durability rules. Findings
-    matching ``allowlist`` entries come back with ``suppressed=True``."""
+    matching ``allowlist`` entries come back with ``suppressed=True``.
+    ``params`` carries per-run rule knobs (e.g. ``{"oversub-factor": 2.0}``
+    for the ``oversubscribed-link`` budget)."""
     if isinstance(wf, TaskGraph):
         graph, compiled = wf, None
     else:
         graph, compiled = wf.graph, wf
-    ctx = LintContext(graph=graph, wf=compiled, config=config, name=name)
+    ctx = LintContext(graph=graph, wf=compiled, config=config, name=name,
+                      params=dict(params or {}))
     findings: list[Finding] = []
     for rid in (rules if rules is not None else RULES):
         r = RULES[rid]

@@ -35,7 +35,8 @@ from repro.core.locstore import REMOTE_TIER, LocStore
 __all__ = ["SanitizerError", "env_enabled", "check_placement_mirror",
            "check_membership", "check_tier_usage", "check_pin_conservation",
            "check_candidate_index", "check_ledger", "check_term_cache",
-           "check_proactive", "check_engine", "check_router"]
+           "check_proactive", "check_engine", "check_router",
+           "check_link_rows", "check_link_paths"]
 
 
 class SanitizerError(AssertionError):
@@ -248,6 +249,50 @@ def check_term_cache(sched: Any, cluster: Any) -> None:
             got = sched._term_cache[name][node]
             if got != want:
                 _fail("term-cache", (name, node), want, got)
+
+
+def check_link_rows(cluster: Any) -> None:
+    """Every cached link-bandwidth row (and its uniform-collapse marker) vs
+    a from-scratch rebuild through ``hw.link_gbps`` — with a topology
+    attached the rows carry real path bandwidths, and the elastic-growth
+    in-place row extension (SimCluster.join) is exactly the kind of
+    incremental update that can drift. The divergent key is ``(src, dst)``
+    (or ``(src, "uniform")`` for the collapse marker)."""
+    rows = getattr(cluster, "_link_rows", None)
+    if not rows:
+        return
+    hw = cluster.hw
+    for src in sorted(rows):
+        row, uniform = rows[src]
+        if len(row) != cluster.n_nodes:
+            _fail("link-row", (src, "len"), cluster.n_nodes, len(row))
+        for dst in range(cluster.n_nodes):
+            want = hw.link_gbps(src, dst)
+            if row[dst] != want:
+                _fail("link-row", (src, dst), want, row[dst])
+        vals = set(row[:src] + row[src + 1:]
+                   if 0 <= src < cluster.n_nodes else row)
+        want_uniform = vals.pop() if len(vals) == 1 else None
+        if uniform != want_uniform:
+            _fail("link-row", (src, "uniform"), want_uniform, uniform)
+
+
+def check_link_paths(path_cache: Mapping | None, topo: Any) -> None:
+    """Every memoized (src, dst) -> lane-key path vs a fresh
+    ``topo.links()`` walk of the link graph — the path table feeds the
+    per-link lane charging, so a stale entry would mischarge contention.
+    No-op without a real topology (flat runs never populate the cache)."""
+    if topo is None:
+        if path_cache:
+            _fail("link-path", sorted(path_cache)[0],
+                  "empty path cache without a topology",
+                  path_cache[sorted(path_cache)[0]])
+        return
+    for key in sorted(path_cache or {}):
+        want = topo.links(*key)
+        got = path_cache[key]
+        if got != want:
+            _fail("link-path", key, want, got)
 
 
 def check_proactive(sched: Any, cluster: Any) -> None:

@@ -21,6 +21,7 @@ from repro.core.prefetch import PrefetchEngine
 from repro.core.scheduler import (Assignment, FCFSScheduler, LocalityScheduler,
                                   PrefetchRequest, ProactiveScheduler)
 from repro.core.simulator import SimResult, WorkflowSimulator, simulate
+from repro.core.topology import ClusterTopology, NodeProfile
 from repro.core.wfcompiler import (CompiledWorkflow, HardwareModel, HPC_CLUSTER,
                                    TPU_V5E, compile_workflow)
 
@@ -32,7 +33,7 @@ __all__ = [
     "tiered_hierarchy", "WriteBackEntry", "WriteBackQueue",
     "DropReport", "JoinReport",
     "CompiledWorkflow", "HardwareModel", "HPC_CLUSTER", "TPU_V5E",
-    "compile_workflow",
+    "compile_workflow", "ClusterTopology", "NodeProfile",
     "Assignment", "FCFSScheduler", "LocalityScheduler", "PrefetchRequest",
     "ProactiveScheduler",
     "PrefetchEngine", "WorkflowExecutor",

@@ -19,6 +19,7 @@ import dataclasses
 from typing import Mapping, Sequence
 
 from repro.core.locstore import StorageHierarchy
+from repro.core.topology import ClusterTopology
 from repro.core.wfcompiler import HardwareModel, TPU_V5E
 
 
@@ -42,6 +43,23 @@ class SimConfig:
 
     n_nodes: int = 64
     hw: HardwareModel = TPU_V5E
+    # Explicit link graph + per-node profiles (repro.core.topology). When
+    # set, the simulator charges transfers per traversed link and the
+    # schedulers/store see topology-backed costs; a *flat* topology
+    # (ClusterTopology.one_switch) is bit-identical to topology=None.
+    topology: ClusterTopology | None = None
+    # False: the *simulator* still charges real per-link costs but the
+    # scheduler/store keep the flat scalar view — the topology-blind
+    # ablation bench_topology compares against.
+    topology_aware: bool = True
+    # Predictive re-replication (health-monitor model): when True, each
+    # scheduled failure is flagged ``predict_lead_s`` seconds ahead and the
+    # suspect node's sole-copy data is re-replicated to a different rack
+    # (any other node when flat) before the failure lands, under a
+    # ``predict_rereplicate_bytes`` budget per warning.
+    predict_failures: bool = False
+    predict_lead_s: float = 3.0
+    predict_rereplicate_bytes: float = float("inf")
     speeds: Mapping[int, float] | None = None
     failures: tuple[tuple[float, int], ...] = ()
     joins: tuple[tuple[float, int], ...] = ()

@@ -597,7 +597,8 @@ class LocStore:
                  promote_on_access: bool = True,
                  write_policy: str = "through",
                  coordinated_eviction: bool = False,
-                 durability: str = "none") -> None:
+                 durability: str = "none",
+                 topology: Any | None = None) -> None:
         if n_nodes < 1:
             raise ValueError("need at least one node")
         if eviction_policy not in ("lru", "cost"):
@@ -611,6 +612,13 @@ class LocStore:
                              f"(want one of {DURABILITY_POLICIES})")
         self.n_nodes = n_nodes
         self.durability = durability
+        # optional repro.core.topology.ClusterTopology: placement spreads
+        # across racks (failure domains), reads prefer rack-local replicas,
+        # and re-replication favors rack diversity. None or a *flat*
+        # topology keeps every decision identical to the flat model.
+        self.topology = topology
+        self._topo_real = (topology if topology is not None
+                           and not topology.flat else None)
         self.loc = LocationService(n_meta_shards)
         self.default_policy = default_policy
         self.hierarchy = hierarchy or FLAT_HIERARCHY
@@ -679,11 +687,19 @@ class LocStore:
         survivors no matter which nodes are down. (The old linear probe
         ``(node + 1) % n_nodes`` handed a dead run's entire hash/rr mass to
         its first surviving successor.) With nothing failed the alive list
-        is ``range(n_nodes)`` and the mapping is identical to the original."""
+        is ``range(n_nodes)`` and the mapping is identical to the original.
+
+        Under a real topology the alive list is re-ordered rack-interleaved
+        (:meth:`_spread_order`), so consecutive hash/rr indices land in
+        different racks — default placement spreads across failure domains.
+        With one rack (flat/one-switch) the interleave is the identity, so
+        flat placement stays bit-identical."""
         with self._lock:
             alive = self._alive
             if not alive:
                 raise RuntimeError("every node has failed")
+            if self._topo_real is not None:
+                alive = self._spread_order()
             if self.default_policy == "hash":   # Hercules/Memcached behaviour
                 node = alive[_stable_hash(name) % len(alive)]
             elif self.default_policy == "rr":
@@ -693,6 +709,30 @@ class LocStore:
                 raise ValueError(
                     f"unknown default policy {self.default_policy!r}")
         return Placement(nodes=(node,), tier=self.hierarchy.top)
+
+    def _spread_order(self) -> list[int]:
+        """The alive nodes re-ordered rack-interleaved: position-within-rack
+        major, rack minor — walking the list round-robins the racks, so any
+        consecutive window of default placements spans as many failure
+        domains as possible. Cached per alive-list generation (membership
+        changes are rare next to placements)."""
+        alive = self._alive
+        key = (len(alive), alive[0] if alive else -1, alive[-1] if alive else -1)
+        cached = getattr(self, "_spread_cache", None)
+        if cached is not None and cached[0] == key and cached[1] == alive:
+            return cached[2]
+        topo = self._topo_real
+        seen: dict[int, int] = {}
+        keyed: list[tuple[int, int, int]] = []
+        for n in alive:
+            r = topo.rack(n)
+            k = seen.get(r, 0)
+            seen[r] = k + 1
+            keyed.append((k, r, n))
+        keyed.sort()
+        order = [n for _, _, n in keyed]
+        self._spread_cache = (key, list(alive), order)
+        return order
 
     def _norm_loc(self, loc: Any) -> Placement:
         if isinstance(loc, Placement):
@@ -1199,9 +1239,10 @@ class LocStore:
         return self.join_node(node)
 
     def rereplication_candidates(self, node: int, *,
-                                 max_bytes: float = float("inf")
+                                 max_bytes: float = float("inf"),
+                                 only_src: int | None = None
                                  ) -> list[tuple[str, int, str, float]]:
-        """Objects worth copying toward a newcomer, riskiest first.
+        """Objects worth copying toward ``node``, riskiest first.
 
         A candidate has exactly ONE node-local replica (a real PFS copy
         does not count — re-replication is about node-local locality and
@@ -1209,12 +1250,20 @@ class LocStore:
         is not write-around (those are never replicated). Ordering is the
         write side of ``risk_aware``: *dirty* sole copies first (no durable
         PFS version — losing that node loses the data), then clean sole
-        copies; largest-first within each class, name as the deterministic
-        tiebreak. ``max_bytes`` caps the greedy budget (too-big entries are
-        skipped, smaller ones keep filling).
+        copies; under a real topology, sources in a *different rack* than
+        ``node`` rank first within each class (copying them to ``node``
+        buys rack-domain diversity — flat topologies make this component
+        constant, keeping the order unchanged); largest-first next, name as
+        the deterministic tiebreak. ``max_bytes`` caps the greedy budget
+        (too-big entries are skipped, smaller ones keep filling).
+
+        ``only_src`` restricts candidates to sole copies living on that one
+        node — the predictive trigger draining a straggling/flaky suspect
+        before its failure (the budget then applies to the suspect alone).
 
         Returns ``(name, src_node, src_tier, nbytes)`` tuples."""
-        out: list[tuple[int, float, str, int, str]] = []
+        topo = self._topo_real
+        out: list[tuple[int, int, float, str, int, str]] = []
         with self._lock:
             for name, res in self._residency.items():
                 locals_ = [(n, t) for n, t in res.items() if n != REMOTE_TIER]
@@ -1223,15 +1272,19 @@ class LocStore:
                 src, src_tier = locals_[0]
                 if src == node or src in self._failed_nodes:
                     continue
+                if only_src is not None and src != only_src:
+                    continue
                 if self._mode.get(name, self.write_policy) == "around":
                     continue
                 nbytes = self._sizes.get(name, 0.0)
                 risk = 0 if name in self._dirty else 1
-                out.append((risk, -nbytes, name, src, src_tier))
+                diverse = (1 if topo is not None
+                           and topo.same_rack(src, node) else 0)
+                out.append((risk, diverse, -nbytes, name, src, src_tier))
         out.sort()
         picked: list[tuple[str, int, str, float]] = []
         budget = max_bytes
-        for risk, neg, name, src, src_tier in out:
+        for risk, _diverse, neg, name, src, src_tier in out:
             nbytes = -neg
             if nbytes > budget:
                 continue
@@ -1240,15 +1293,17 @@ class LocStore:
         return picked
 
     def rereplicate_to(self, node: int, *, max_bytes: float = float("inf"),
-                       tier: str | None = None) -> tuple[str, ...]:
+                       tier: str | None = None,
+                       only_src: int | None = None) -> tuple[str, ...]:
         """Copy sole-copy objects (dirty first) onto ``node`` — close the
         at-risk window a newcomer opens the capacity to close. ``tier`` is
         the landing tier on the newcomer (default: the hierarchy's bottom —
-        bulk re-replication must not shoulder warm data out of fast tiers)."""
+        bulk re-replication must not shoulder warm data out of fast tiers).
+        ``only_src`` drains a single suspect node (predictive trigger)."""
         want = tier if tier is not None else self.hierarchy.bottom
         done: list[str] = []
         for name, _src, _src_tier, nbytes in self.rereplication_candidates(
-                node, max_bytes=max_bytes):
+                node, max_bytes=max_bytes, only_src=only_src):
             self.replicate(name, [node], tier=want)
             self.rereplications += 1
             self.bytes_rereplicated += nbytes
@@ -1414,10 +1469,20 @@ class LocStore:
                                              + nbytes)
                 self.transfers.append(t)
                 return value, t
-            # remote replica: prefer non-PFS, then the fastest tier, then near
-            src = min(res, key=lambda n: (n == REMOTE_TIER,
-                                          self.hierarchy.rank(res[n]),
-                                          abs(n - at)))
+            # remote replica: prefer non-PFS, then the fastest tier, then
+            # near — under a real topology "near" means rack-local first
+            # (a same-ToR replica skips the spine); the rack component is
+            # constant on flat topologies, so flat choices are unchanged
+            topo = self._topo_real
+            if topo is None:
+                src = min(res, key=lambda n: (n == REMOTE_TIER,
+                                              self.hierarchy.rank(res[n]),
+                                              abs(n - at)))
+            else:
+                src = min(res, key=lambda n: (n == REMOTE_TIER,
+                                              self.hierarchy.rank(res[n]),
+                                              0 if topo.same_rack(n, at) else 1,
+                                              abs(n - at)))
             src_tier = res[src]
             dst_tier = self.hierarchy.top
             est = (self.hierarchy.media_seconds(nbytes, src_tier)

@@ -98,7 +98,17 @@ class ClusterView(Protocol):
         """``(row, uniform)`` where ``row[dst] == link_gbps(src, dst)`` for
         every node, and ``uniform`` is the single off-diagonal bandwidth when
         the row has one (None for non-uniform rows). Views may omit this (or
-        return None) — batched scoring then calls ``link_gbps`` per node."""
+        return None) — batched scoring then calls ``link_gbps`` per node.
+        Under a topology-backed view the row carries real path bandwidths
+        (rack-local > cross-spine), which is how candidate scoring prefers
+        rack-local replicas with no scheduler-side topology code."""
+        ...
+    def node_queue_seconds(self, node: int) -> float:
+        """Seconds of already-queued demand traffic behind ``node``'s NIC
+        and its rack uplink — lets placement route around saturated links.
+        Views may omit this (or return 0.0, as every flat view does): the
+        penalty is only added when positive, so flat decisions are
+        unchanged."""
         ...
 
 
@@ -530,9 +540,18 @@ class LocalityScheduler(SchedulerBase):
         costs = self._score_nodes(tid, free, cluster, assume)
         best, best_cost = free[0], float("inf")
         est = self.wf.est_seconds[tid] if self.speed_aware else 0.0
+        qfn = getattr(cluster, "node_queue_seconds", None)
         for node, c in zip(free, costs):
             if self.speed_aware:
                 c += est / max(cluster.worker_speed(node), 1e-6)
+            if qfn is not None:
+                # route around saturated links: a candidate behind a backed-up
+                # NIC/uplink pays its queue delay. Flat views report 0.0 or
+                # None — a Protocol subclass inherits the stub body — (the
+                # guard skips the add), so flat decisions are bit-identical.
+                q = qfn(node) or 0.0
+                if q > 0.0:
+                    c += q
             if c < best_cost:
                 best, best_cost = node, c
         return best, best_cost

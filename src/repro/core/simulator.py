@@ -29,9 +29,10 @@ from typing import Callable, Mapping, Sequence
 
 from repro.core.config import SimConfig
 from repro.core.locstore import (DropReport, JoinReport, LocStore, Placement,
-                                 REMOTE_TIER, SimObject)
+                                 REMOTE_TIER, SimObject, _stable_hash)
 from repro.core.scheduler import (Assignment, ClusterView, LocalityScheduler,
                                   ProactiveScheduler, SchedulerBase)
+from repro.core.topology import ClusterTopology
 from repro.core.wfcompiler import CompiledWorkflow, HardwareModel
 
 __all__ = ["SimConfig", "SimResult", "SimCluster", "WorkflowSimulator",
@@ -68,8 +69,15 @@ class SimResult:
     joins: int = 0                # nodes (re)admitted mid-run
     rereplications: int = 0       # sole-copy objects staged toward newcomers
     bytes_rereplicated: float = 0.0
+    # topology accounting (stays 0/empty on flat configs)
+    cross_spine_bytes: float = 0.0   # bytes that traversed any ToR uplink
+    predictive_rereplications: int = 0  # sole copies drained off suspects
+    bytes_predictively_rereplicated: float = 0.0
     drop_reports: list[DropReport] = dataclasses.field(default_factory=list)
     join_reports: list[JoinReport] = dataclasses.field(default_factory=list)
+    # per-link cumulative bytes under a real topology: NIC lanes keyed by
+    # node id, uplinks by ("up", rack), the PFS attachment by ("pfs",)
+    link_bytes: dict = dataclasses.field(default_factory=dict)
 
     @property
     def locality_hit_rate(self) -> float:
@@ -102,7 +110,60 @@ class SimResult:
             "joins": float(self.joins),
             "rereplications": float(self.rereplications),
             "bytes_rereplicated": self.bytes_rereplicated,
+            "cross_spine_bytes": self.cross_spine_bytes,
+            "predictive_rereplications": float(self.predictive_rereplications),
+            "bytes_predictively_rereplicated":
+                self.bytes_predictively_rereplicated,
         }
+
+
+class _LinkLanes:
+    """One priority class of transfer lanes over the network.
+
+    Flat model (``topo is None``): one lane per node NIC — exactly the
+    legacy per-destination ``nic_free`` lists, bit-identical. Real topology:
+    a transfer occupies **every link on its path** (endpoint NICs, the
+    racks' ToR uplinks, the PFS attachment), so concurrent transfers
+    through a shared uplink or the PFS link genuinely contend — the
+    per-NIC lanes are the degenerate single-link special case.
+    """
+
+    __slots__ = ("topo", "node", "extra")
+
+    def __init__(self, topo: ClusterTopology | None, n_nodes: int,
+                 t0: float = 0.0) -> None:
+        self.topo = topo                  # None => legacy per-NIC lanes
+        self.node = [t0] * n_nodes        # NIC lane per node
+        self.extra: dict = {}             # ("up", rack)/("pfs",) -> busy-until
+
+    def __len__(self) -> int:
+        return len(self.node)
+
+    def avail(self, path) -> float:
+        """Earliest instant every link on ``path`` is free."""
+        t = 0.0
+        for k in path:
+            v = self.node[k] if isinstance(k, int) else self.extra.get(k, 0.0)
+            if v > t:
+                t = v
+        return t
+
+    def occupy(self, path, until: float) -> None:
+        for k in path:
+            if isinstance(k, int):
+                self.node[k] = until
+            else:
+                self.extra[k] = until
+
+    def reset_node(self, node: int, t0: float) -> None:
+        """A dead/rejoining node's NIC serves nothing: its lane restarts at
+        ``t0``. Shared uplink/PFS lanes keep their queued traffic — the
+        fabric does not forget other tenants' transfers."""
+        self.node[node] = t0
+
+    def grow_to(self, n: int, t0: float) -> None:
+        while len(self.node) < n:
+            self.node.append(t0)
 
 
 class SimCluster(ClusterView):
@@ -127,6 +188,29 @@ class SimCluster(ClusterView):
         # per-source link-bandwidth rows for batched candidate scoring:
         # bandwidths are static per HardwareModel, so each row is built once
         self._link_rows: dict[int, tuple[list[float], float | None]] = {}
+        # topology-aware runs attach the simulator's demand lanes + clock so
+        # the schedulers can route around saturated links (node_queue_seconds)
+        self.now = 0.0
+        self._lanes: _LinkLanes | None = None
+
+    def attach_lanes(self, lanes: _LinkLanes) -> None:
+        self._lanes = lanes
+
+    def node_queue_seconds(self, node: int) -> float:
+        """Seconds of already-queued demand traffic a new transfer to/from
+        ``node`` would wait behind — the max backlog over the node's NIC and
+        its rack's ToR uplink. 0.0 on flat topologies (no lanes attached),
+        which keeps flat scheduling decisions identical."""
+        lanes = self._lanes
+        if lanes is None:
+            return 0.0
+        q = lanes.node[node] - self.now if node < len(lanes.node) else 0.0
+        topo = lanes.topo
+        if topo is not None:
+            up = lanes.extra.get(("up", topo.rack(node)), 0.0) - self.now
+            if up > q:
+                q = up
+        return q if q > 0.0 else 0.0
 
     def acquire(self, node: int) -> None:
         """A task started on ``node`` — it is no longer free."""
@@ -230,6 +314,7 @@ _XFER_DONE = 1
 _FAIL = 2
 _WB_FLUSH = 3
 _JOIN = 4
+_PREDICT = 5        # health monitor flags a node ahead of its failure
 
 
 class WorkflowSimulator:
@@ -254,17 +339,39 @@ class WorkflowSimulator:
         self.config = config
         self.wf = wf
         self.sched = scheduler
-        self.hw = config.hw
+        topo = config.topology
+        if topo is not None and topo.n_nodes != config.n_nodes:
+            raise ValueError(f"topology covers {topo.n_nodes} nodes, "
+                             f"n_nodes={config.n_nodes}")
+        # the *charging* model: with a topology attached, move_seconds prices
+        # the max-utilized link on the node->ToR->spine path (flat topologies
+        # keep the scalar arithmetic, so costs are bit-identical)
+        self.hw = config.hw.with_topology(topo) if topo is not None \
+            else config.hw
+        # a real (non-flat) topology switches the NIC lanes to per-link lanes
+        self._topo_real = topo if topo is not None and not topo.flat else None
+        # the schedulers'/store's *view*: topology_aware=False is the blind
+        # ablation — the simulator still charges real per-link costs, but
+        # placement decisions see only the flat scalar model
+        view_hw = self.hw if config.topology_aware else config.hw
+        store_topo = topo if config.topology_aware else None
+        # per-node speeds: topology profiles supply the defaults
+        # (mixed-generation clusters); explicit config.speeds overrides win
+        speeds: dict[int, float] = dict(topo.speeds()) if topo is not None \
+            else {}
+        if config.speeds:
+            speeds.update(config.speeds)
         self.n_nodes = config.n_nodes
         self.store = LocStore(config.n_nodes, hierarchy=config.hierarchy,
                               write_policy=config.write_policy,
                               coordinated_eviction=config.coordinated_eviction,
-                              durability=config.durability)
+                              durability=config.durability,
+                              topology=store_topo)
         # fsync_on_barrier: a store barrier (flush everything dirty) fires
         # every `barrier_every` task finishes — the workflow's sync points
         self.barrier_every = max(int(config.barrier_every), 1)
-        self.cluster = SimCluster(config.n_nodes, config.hw, self.store,
-                                  config.speeds)
+        self.cluster = SimCluster(config.n_nodes, view_hw, self.store,
+                                  speeds or None)
         self.failures = sorted(config.failures)
         self.joins = sorted(config.joins)
         self.join_rereplicate_bytes = config.join_rereplicate_bytes
@@ -317,7 +424,10 @@ class WorkflowSimulator:
             if config.external_loc == "remote":
                 loc = Placement(nodes=(REMOTE_TIER,), tier="remote")
             else:
-                loc = Placement(nodes=(hash(d.name) % config.n_nodes,))
+                # content-stable hash: scattered placement must not depend
+                # on the process's string-hash salt (reproducible runs)
+                loc = Placement(nodes=(_stable_hash(d.name)
+                                       % config.n_nodes,))
             self.store.put(d.name, SimObject(wf.sizes[d.name]), loc=loc)
 
     # ------------------------------------------------------------------ run
@@ -332,6 +442,14 @@ class WorkflowSimulator:
         # processes the failure first (seq breaks the time tie in push order)
         for t, node in self.joins:
             heapq.heappush(events, (t, next(seq), _JOIN, node))
+        if self.config.predict_failures:
+            # health-monitor model: each scheduled failure is flagged
+            # predict_lead_s ahead, giving the predictive re-replication
+            # trigger time to drain the suspect's sole copies
+            lead = max(float(self.config.predict_lead_s), 0.0)
+            for t, node in self.failures:
+                heapq.heappush(events,
+                               (max(t - lead, 0.0), next(seq), _PREDICT, node))
 
         unfinished_preds = {tid: sum(1 for _ in wf.graph.predecessors(tid))
                             for tid in wf.graph.tasks}
@@ -341,11 +459,23 @@ class WorkflowSimulator:
         # attempt may start before the OLD attempt's finish event pops — the
         # stale event must not complete the new run early
         run_gen: dict[str, int] = {}
-        # Per-destination NIC, two priority classes: demand fetches queue only
-        # behind demand; prefetch is preemptible background traffic that fills
-        # idle network time (the paper pipelines "while predecessors run").
-        nic_free = [0.0] * self.n_nodes           # demand channel
-        nic_bg_free = [0.0] * self.n_nodes        # background (prefetch)
+        # Per-link transfer lanes, two priority classes: demand fetches queue
+        # only behind demand; prefetch is preemptible background traffic that
+        # fills idle network time (the paper pipelines "while predecessors
+        # run"). Flat configs get one lane per destination NIC (the legacy
+        # model, bit-identical); a real topology adds ToR-uplink and PFS
+        # lanes, so transfers through a shared spine contend (_LinkLanes).
+        topo = self._topo_real
+        nic_free = _LinkLanes(topo, self.n_nodes)     # demand channel
+        nic_bg_free = _LinkLanes(topo, self.n_nodes)  # background (prefetch)
+        if topo is not None and self.config.topology_aware:
+            self.cluster.attach_lanes(nic_free)
+        # (src, dst) -> lane-key path, memoized (rebuilt-from-scratch by the
+        # sanitizer's check_link_paths at checkpoints)
+        self._path_cache: dict[tuple[int, int], tuple] = {}
+        path_cache = self._path_cache
+        link_bytes: dict = {}
+        cross_spine_bytes = 0.0
         io_wait: dict[str, float] = {}
         bytes_prefetched = 0.0
         reruns = 0
@@ -354,6 +484,35 @@ class WorkflowSimulator:
         joins_done = 0
         rereplications = 0
         bytes_rereplicated = 0.0
+        predictive_rereps = 0
+        bytes_predictive = 0.0
+
+        def lane_path(src: int, dst: int, endpoint: int) -> tuple:
+            """Lane keys a src->dst transfer occupies. Flat model: just the
+            charged endpoint's NIC (legacy semantics)."""
+            if topo is None:
+                return (endpoint,)
+            key = (src, dst)
+            p = path_cache.get(key)
+            if p is None:
+                p = topo.links(src, dst)
+                path_cache[key] = p
+            return p
+
+        def note_bytes(path: tuple, nbytes: float) -> None:
+            """Per-link byte accounting (real topologies only): every link on
+            the path carries the payload; a transfer counts toward
+            cross_spine_bytes once if it traversed any ToR uplink."""
+            nonlocal cross_spine_bytes
+            if topo is None:
+                return
+            crossed = False
+            for k in path:
+                link_bytes[k] = link_bytes.get(k, 0.0) + nbytes
+                if k.__class__ is tuple and k[0] == "up":
+                    crossed = True
+            if crossed:
+                cross_spine_bytes += nbytes
         drop_reports: list[DropReport] = []
         join_reports: list[JoinReport] = []
         records: dict[str, dict] = {}
@@ -461,6 +620,8 @@ class WorkflowSimulator:
             _san.check_placement_mirror(sched, self.store)
             _san.check_term_cache(sched, self.cluster)
             _san.check_proactive(sched, self.cluster)
+            _san.check_link_rows(self.cluster)
+            _san.check_link_paths(path_cache, topo)
             if use_index:
                 _san.check_candidate_index(
                     state=state, avail_count=avail_count,
@@ -481,8 +642,10 @@ class WorkflowSimulator:
             if tr.local:
                 return t0 + tr.est_seconds
             dur = self.hw.move_seconds(tr.nbytes, tr.src, dst) + tr.est_seconds
-            start = max(nic_free[dst], t0)
-            nic_free[dst] = start + dur
+            path = lane_path(tr.src, dst, dst)
+            start = max(nic_free.avail(path), t0)
+            nic_free.occupy(path, start + dur)
+            note_bytes(path, tr.nbytes)
             return start + dur
 
         def drain_eviction_traffic(t0: float) -> None:
@@ -502,20 +665,26 @@ class WorkflowSimulator:
                     continue
                 dur = (self.hw.move_seconds(tr.nbytes, tr.src, REMOTE_TIER)
                        + tr.est_seconds)
+                path = lane_path(tr.src, REMOTE_TIER, tr.src)
                 if tr.kind in ("demote", "spill", "fsync"):
                     # fsync is ack/barrier-blocking by design: it rides the
                     # demand lane, so the durability window's cost is real —
                     # fetches queue behind the eager flush
-                    nic_free[tr.src] = max(nic_free[tr.src], t0) + dur
+                    end = max(nic_free.avail(path), t0) + dur
+                    nic_free.occupy(path, end)
+                    note_bytes(path, tr.nbytes)
                 elif tr.kind == "writearound":
-                    nic_bg_free[tr.src] = max(nic_bg_free[tr.src], t0) + dur
+                    end = max(nic_bg_free.avail(path), t0) + dur
+                    nic_bg_free.occupy(path, end)
+                    note_bytes(path, tr.nbytes)
                 elif tr.kind == "writeback":
                     # the flush becomes durable when the background lane
                     # finishes it, not at enqueue — the queue is FIFO and
                     # transfers are scanned in enqueue order, so one
                     # flush-done event per transfer drains the right entry
-                    end = max(nic_bg_free[tr.src], t0) + dur
-                    nic_bg_free[tr.src] = end
+                    end = max(nic_bg_free.avail(path), t0) + dur
+                    nic_bg_free.occupy(path, end)
+                    note_bytes(path, tr.nbytes)
                     heapq.heappush(events, (end, next(seq), _WB_FLUSH, None))
 
         def start_assignment(a: Assignment, t0: float) -> None:
@@ -540,6 +709,7 @@ class WorkflowSimulator:
         def schedule_pass(t0: float) -> None:
             nonlocal bytes_prefetched
             drain_eviction_traffic(t0)
+            self.cluster.now = t0   # node_queue_seconds measures backlog
             if ready and self.cluster.free_workers():
                 for a in sched.select(sorted(ready), self.cluster):
                     ready.discard(a.tid)
@@ -562,8 +732,11 @@ class WorkflowSimulator:
                     dur = (self.hw.move_seconds(req.est_bytes, src, req.dst)
                            + hier.media_seconds(req.est_bytes, p.tier_on(src))
                            + hier.media_seconds(req.est_bytes, dst_tier))
-                    start = max(nic_bg_free[req.dst], nic_free[req.dst], t0)
-                    nic_bg_free[req.dst] = start + dur
+                    path = lane_path(src, req.dst, req.dst)
+                    start = max(nic_bg_free.avail(path),
+                                nic_free.avail(path), t0)
+                    nic_bg_free.occupy(path, start + dur)
+                    note_bytes(path, req.est_bytes)
                     bytes_prefetched += req.est_bytes
                     heapq.heappush(events, (start + dur, next(seq), _XFER_DONE,
                                             (req.data_name, src, req.dst,
@@ -577,8 +750,9 @@ class WorkflowSimulator:
             self.cluster.fail(node)
             # the dead node's NIC lanes serve nothing anymore: reset them so
             # later accounting cannot queue behind (or charge) a dead queue
-            nic_free[node] = t0
-            nic_bg_free[node] = t0
+            # (shared uplink/PFS lanes keep other tenants' queued traffic)
+            nic_free.reset_node(node, t0)
+            nic_bg_free.reset_node(node, t0)
             # requeue the running task and release its prefetch pins — the
             # task-finish unpin will never fire for a failure-cancelled task
             for tid, n in list(running_at.items()):
@@ -617,14 +791,13 @@ class WorkflowSimulator:
             drain_eviction_traffic(t0)
             grew = node >= len(nic_free)
             was_failed = node in self.cluster.failed
-            while len(nic_free) < node + 1:
-                nic_free.append(t0)
-                nic_bg_free.append(t0)
+            nic_free.grow_to(node + 1, t0)
+            nic_bg_free.grow_to(node + 1, t0)
             if was_failed:
                 # a rejoining node's NIC starts idle at the join instant
                 # (an already-alive node keeps its queued traffic)
-                nic_free[node] = t0
-                nic_bg_free[node] = t0
+                nic_free.reset_node(node, t0)
+                nic_bg_free.reset_node(node, t0)
             # storage layer first: clears the failed mark, reopens default
             # placement, and fires ("join_node", node, None) so the indexed
             # scheduler and preplace eligibility absorb the newcomer
@@ -646,12 +819,47 @@ class WorkflowSimulator:
                 dur = (self.hw.move_seconds(nbytes, src, node)
                        + self.store.hierarchy.media_seconds(nbytes, src_tier)
                        + self.store.hierarchy.media_seconds(nbytes, bulk))
-                start = max(nic_bg_free[node], t0)
-                nic_bg_free[node] = start + dur
+                path = lane_path(src, node, node)
+                start = max(nic_bg_free.avail(path), t0)
+                nic_bg_free.occupy(path, start + dur)
+                note_bytes(path, nbytes)
                 rereplications += 1
                 bytes_rereplicated += nbytes
                 heapq.heappush(events, (start + dur, next(seq), _XFER_DONE,
                                         (name, src, node, bulk, None)))
+
+        def predict_node(suspect: int, t0: float) -> None:
+            """The health monitor flagged ``suspect``: drain its sole-copy
+            data (dirty first) to a target in a *different rack* before the
+            failure lands — the predictive trigger the reactive join-time
+            re-replication (join_node above) cannot match, because it only
+            runs after the data is already gone. The copies ride the
+            background lanes; ones still in flight when the failure hits are
+            aborted by the _XFER_DONE dead-source guard."""
+            nonlocal predictive_rereps, bytes_predictive
+            if suspect in self.cluster.failed or suspect >= self.n_nodes:
+                return
+            target = self._predict_target(suspect)
+            if target is None:
+                return
+            drain_eviction_traffic(t0)
+            bulk = self.store.hierarchy.bottom
+            for name, src, src_tier, nbytes in \
+                    self.store.rereplication_candidates(
+                        target,
+                        max_bytes=self.config.predict_rereplicate_bytes,
+                        only_src=suspect):
+                dur = (self.hw.move_seconds(nbytes, src, target)
+                       + self.store.hierarchy.media_seconds(nbytes, src_tier)
+                       + self.store.hierarchy.media_seconds(nbytes, bulk))
+                path = lane_path(src, target, target)
+                start = max(nic_bg_free.avail(path), t0)
+                nic_bg_free.occupy(path, start + dur)
+                note_bytes(path, nbytes)
+                predictive_rereps += 1
+                bytes_predictive += nbytes
+                heapq.heappush(events, (start + dur, next(seq), _XFER_DONE,
+                                        (name, src, target, bulk, None)))
 
         schedule_pass(0.0)
         while events:
@@ -727,6 +935,8 @@ class WorkflowSimulator:
                 fail_node(payload, now)  # type: ignore[arg-type]
             elif kind == _JOIN:
                 join_node(payload, now)  # type: ignore[arg-type]
+            elif kind == _PREDICT:
+                predict_node(payload, now)  # type: ignore[arg-type]
             schedule_pass(now)
             if self.sanitize:
                 n_events += 1
@@ -774,9 +984,31 @@ class WorkflowSimulator:
             joins=joins_done,
             rereplications=rereplications,
             bytes_rereplicated=bytes_rereplicated,
+            cross_spine_bytes=cross_spine_bytes,
+            predictive_rereplications=predictive_rereps,
+            bytes_predictively_rereplicated=bytes_predictive,
             drop_reports=drop_reports,
             join_reports=join_reports,
+            link_bytes=link_bytes,
         )
+
+    def _predict_target(self, suspect: int) -> int | None:
+        """Where to drain a suspect node's sole copies: the lowest-id alive
+        node in a *different rack* (failure-domain diversity); any other
+        alive node when the topology is flat or single-rack."""
+        topo = self.config.topology
+        best: int | None = None
+        best_key: tuple[int, int] | None = None
+        for n in self.cluster.alive_nodes():
+            if n == suspect:
+                continue
+            same = 1
+            if topo is not None and not topo.flat:
+                same = 1 if topo.same_rack(n, suspect) else 0
+            key = (same, n)
+            if best_key is None or key < best_key:
+                best_key, best = key, n
+        return best
 
     @staticmethod
     def _auto_write_modes(wf: CompiledWorkflow, config: SimConfig,

@@ -22,6 +22,7 @@ from typing import Mapping
 
 from repro.core.dag import TaskGraph
 from repro.core.locstore import REMOTE_TIER
+from repro.core.topology import ClusterTopology
 
 __all__ = ["HardwareModel", "TPU_V5E", "HPC_CLUSTER", "CompiledWorkflow",
            "compile_workflow"]
@@ -40,6 +41,13 @@ class HardwareModel:
     ``move_seconds_tiered`` are the tier-aware cost model the compiler and
     the schedulers rank candidate workers with. ``None`` entries fall back to
     the scalar fields, so flat two-tier configs keep their original costs.
+
+    ``topology`` optionally replaces the scalar pod arithmetic with an
+    explicit :class:`~repro.core.topology.ClusterTopology` link graph:
+    ``link_gbps`` then charges the max-utilized (minimum-capacity) link on
+    the node -> ToR -> spine path. A *flat* topology (``topo.flat``,
+    e.g. ``ClusterTopology.one_switch``) contributes structure only — the
+    scalar model keeps answering, so costs stay bit-identical.
     """
 
     name: str = "tpu-v5e"
@@ -51,8 +59,12 @@ class HardwareModel:
     nodes_per_pod: int = 256
     efficiency: float = 0.5             # sustained fraction of peak for estimates
     tier_gbps: Mapping[str, float] | None = None
+    topology: ClusterTopology | None = None
 
     def link_gbps(self, src: int, dst: int) -> float:
+        topo = self.topology
+        if topo is not None and not topo.flat:
+            return topo.link_gbps(src, dst)
         if src == dst:
             return float("inf")
         if src < 0 or dst < 0:          # negative node id == remote tier
@@ -60,6 +72,12 @@ class HardwareModel:
         if src // self.nodes_per_pod == dst // self.nodes_per_pod:
             return self.ici_gbps
         return self.dcn_gbps
+
+    def with_topology(self, topo: ClusterTopology | None) -> "HardwareModel":
+        """This model with ``topo`` attached (``None`` detaches)."""
+        if topo is self.topology:
+            return self
+        return dataclasses.replace(self, topology=topo)
 
     def tier_bw(self, tier: str) -> float:
         """Media bandwidth of one storage tier (bytes/s)."""

@@ -55,7 +55,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.config import ServingConfig
-from repro.core.locstore import DropReport, JoinReport, LocStore
+from repro.core.locstore import DropReport, JoinReport, LocStore, Placement
 from repro.core.prefetch import PrefetchEngine
 from repro.models import model as M
 
@@ -622,16 +622,36 @@ class Router:
             _san.check_router(self)
 
     # ------------------------------------------------------------ cost model
+    def _path_seconds(self, p: Placement, kv: float, dst: int) -> float:
+        """Seconds to move ``kv`` bytes from the nearest replica of ``p`` to
+        node ``dst`` over the cluster network. Zero when a replica already
+        sits on ``dst`` or when the store has no real topology attached
+        (flat / ``None`` keeps the legacy media-only pricing bit-identical).
+        """
+        topo = getattr(self.store, "topology", None)
+        if topo is None or topo.flat or not p.nodes or dst in p.nodes:
+            return 0.0
+        bw = max(topo.link_gbps(src, dst) for src in p.nodes)
+        if bw == float("inf"):
+            return 0.0
+        if bw <= 0.0:
+            return float("inf")
+        return kv / bw
+
     def _resume_cost(self, eng: ServingEngine, name: str) -> float:
         """Seconds to bring a parked session's KV back into the holder's top
         tier: media read of the tier it is parked in + top-tier write, plus —
         when the engine is saturated — the park of a victim session and the
-        demotions the promotion causes under top-tier pressure."""
+        demotions the promotion causes under top-tier pressure. When the
+        store carries a real :class:`~repro.core.topology.ClusterTopology`
+        and no replica lives on the engine's node, the network hop from the
+        nearest replica is charged too (a cross-spine resume is not free)."""
         hier = self.store.hierarchy
         p = self.store.stat(name)
         kv = float(p.xattr.get("size", 0.0))
         tier = p.tier_on(eng.node)
         cost = hier.media_seconds(kv, tier) + hier.media_seconds(kv, hier.top)
+        cost += self._path_seconds(p, kv, eng.node)
         idle_tier = hier.normalize(eng.idle_tier)
         if not eng.can_admit():
             # a victim session must be parked first (top read + idle write)
@@ -779,14 +799,21 @@ class Router:
                     value = v
             target: ServingEngine | None = None
             if value is not None:
-                # most-free surviving engine with a matching slot shape —
+                # surviving engine with a matching slot shape, cheapest KV
+                # move from the surviving replica first (under a real
+                # topology; the term is a constant 0.0 otherwise so the
+                # order reduces to most-free-slots), then most free slots —
                 # a full engine is still a valid home: the session can
                 # stay parked there, so capacity never forfeits a
                 # surviving durable replica
+                p = self.store.stat(name)
+                kv = float(p.xattr.get("size", 0.0))
                 target = next(
                     (cand for cand in sorted(self.engines.values(),
                                              key=lambda e:
-                                             -len(e._free_slots))
+                                             (self._path_seconds(p, kv,
+                                                                 e.node),
+                                              -len(e._free_slots)))
                      if cand.compatible_state(value.state)), None)
             if target is not None and target.adopt(
                     sid, prompt_len=sess.prompt_len, tokens=sess.tokens):

@@ -345,7 +345,8 @@ def build_trace_stack(*, n_engines: int = 4, max_batch: int = 8,
                       cost: CostModel | None = None,
                       allow_park: bool | None = None,
                       write_policy: str = "back",
-                      durability: str = "none") -> tuple[Router, LocStore]:
+                      durability: str = "none",
+                      topology=None) -> tuple[Router, LocStore]:
     """A synthetic-backend serving cluster sized for trace runs.
 
     ``tiered=True``: per-node HBM holding exactly the live slots + a burst
@@ -356,6 +357,9 @@ def build_trace_stack(*, n_engines: int = 4, max_batch: int = 8,
     ``durability="flush_before_ack"`` when the trace includes node failures
     and parked sessions should survive them (a park then always leaves a
     PFS copy behind, so ``Router.fail_engine`` can re-home them).
+    ``topology`` (a :class:`~repro.core.topology.ClusterTopology`) makes the
+    router's resume-vs-migrate pricing and failover re-homing charge real
+    network paths; ``None`` or a flat topology keeps legacy pricing.
     """
     cost = cost or CostModel()
     if tiered:
@@ -364,9 +368,9 @@ def build_trace_stack(*, n_engines: int = 4, max_batch: int = 8,
              TierSpec("bb", bb_slots_per_node * kv_bytes, 8e9)],
             remote=TierSpec("remote", float("inf"), 2e9))
         store = LocStore(n_engines, hierarchy=hier, write_policy=write_policy,
-                         durability=durability)
+                         durability=durability, topology=topology)
     else:
-        store = LocStore(n_engines)
+        store = LocStore(n_engines, topology=topology)
     cfg = ServingConfig(max_batch=max_batch, max_seq=1 << 20,
                         allow_park=tiered if allow_park is None else allow_park)
     engines = [ServingEngine(None, None, config=cfg, node=i, store=store,

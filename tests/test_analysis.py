@@ -264,6 +264,7 @@ class TestAllowlistAndGate:
             "waw-race", "missing-producer", "dead-dataset",
             "capacity-infeasible", "durability-hazard",
             "unsafe-write-around", "unreachable-node",
+            "oversubscribed-link",
             "zero-capacity-tier", "gapped-membership"}
         assert default_allowlist_path().endswith("analysis_allowlist.json")
 

@@ -14,8 +14,9 @@ import dataclasses
 
 import pytest
 
-from repro.core import (FCFSScheduler, HPC_CLUSTER, LocalityScheduler,
-                        ProactiveScheduler, compile_workflow)
+from repro.core import (ClusterTopology, FCFSScheduler, HPC_CLUSTER,
+                        LocalityScheduler, ProactiveScheduler,
+                        compile_workflow)
 from repro.core.locstore import StorageHierarchy, TierSpec
 from repro.core.simulator import WorkflowSimulator
 from repro.core.workloads import mapreduce_workflow, random_layered_workflow
@@ -54,7 +55,8 @@ def build_scheduler(kind, wf):
     return FCFSScheduler(wf)
 
 
-def run_once(wf_kind, sched_kind, *, indexed, failures, joins=()):
+def run_once(wf_kind, sched_kind, *, indexed, failures, joins=(),
+             topology=None):
     wf = build_workflow(wf_kind)
     sim = WorkflowSimulator(
         wf, build_scheduler(sched_kind, wf),
@@ -62,7 +64,7 @@ def run_once(wf_kind, sched_kind, *, indexed, failures, joins=()):
         failures=list(failures), joins=list(joins),
         hierarchy=tight_hierarchy(),
         write_policy="back", coordinated_eviction=True,
-        durability="fsync_on_barrier")
+        durability="fsync_on_barrier", topology=topology)
     return sim.run()
 
 
@@ -105,6 +107,29 @@ def test_indexed_path_identical_across_membership_cycle(wf_kind, sched_kind):
     assert [r.node for r in idx.join_reports] == [1, 9]
     assert idx.join_reports[0].rejoined and not idx.join_reports[0].grew
     assert idx.join_reports[1].grew and not idx.join_reports[1].rejoined
+
+
+@pytest.mark.parametrize("wf_kind", ["mapreduce", "random_layered"])
+@pytest.mark.parametrize("sched_kind", ["proactive", "locality", "fcfs"])
+@pytest.mark.parametrize("mode", ["healthy", "failures", "membership"])
+def test_flat_topology_is_bit_identical(wf_kind, sched_kind, mode):
+    """A ``one_switch`` topology contributes structure only: the
+    HardwareModel keeps its scalar link model and the simulator its legacy
+    per-NIC lanes, so every config in this suite must produce the exact
+    same task records and scalar counters with and without it — the
+    flat-equivalence guarantee the topology module documents."""
+    kw = {"failures": []}
+    if mode == "failures":
+        kw = {"failures": FAILURES}
+    elif mode == "membership":
+        kw = dict(MEMBERSHIP)
+    ref = run_once(wf_kind, sched_kind, indexed=True, **kw)
+    flat = run_once(wf_kind, sched_kind, indexed=True,
+                    topology=ClusterTopology.one_switch(8), **kw)
+    assert flat.task_records == ref.task_records
+    assert scalar_counters(flat) == scalar_counters(ref)
+    assert flat.cross_spine_bytes == 0.0
+    assert flat.link_bytes == {}
 
 
 def test_indexed_is_the_default_and_reference_is_reachable():
